@@ -1,0 +1,72 @@
+"""Paper Table 12: adversarial robustness — input validation effectiveness
+against the paper's four attack classes."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import InputValidator, OutputSanitizer
+from benchmarks.common import fmt_table
+
+PAPER = {"oversized": 100.0, "malformed": 100.0, "ddos": 99.2,
+         "repetition": 94.0}
+
+
+def run(verbose: bool = True, n: int = 500) -> Dict:
+    rng = np.random.default_rng(0)
+    ctx, vocab = 2048, 50257
+
+    # oversized inputs (10x context)
+    v = InputValidator(ctx, vocab)
+    blocked = sum(not v.validate(
+        np.zeros(int(ctx * rng.uniform(2, 10)), np.int32), float(i)).ok
+        for i in range(n))
+    oversized = blocked / n * 100
+
+    # malformed encodings (out-of-range / negative token ids)
+    v = InputValidator(ctx, vocab)
+    blocked = 0
+    for i in range(n):
+        toks = rng.integers(0, vocab, 64).astype(np.int32)
+        toks[rng.integers(0, 64)] = vocab + int(rng.integers(1, 1000)) \
+            if rng.random() < 0.5 else -int(rng.integers(1, 100))
+        blocked += not v.validate(toks, float(i)).ok
+    malformed = blocked / n * 100
+
+    # rapid-fire requests (DDoS): 100 rps limiter vs 5000 rps flood over 1 s
+    v = InputValidator(ctx, vocab, max_requests_per_s=100)
+    flood = 5000
+    admitted = sum(v.validate(np.arange(8, dtype=np.int32),
+                              now_s=i / flood).ok for i in range(flood))
+    ddos_blocked = (flood - admitted) / flood * 100
+
+    # repetition-inducing prompts: output sanitizer halting degenerate loops
+    s = OutputSanitizer(expected_len=256)
+    caught = 0
+    n_rep = 200
+    for i in range(n_rep):
+        rep_frac = rng.uniform(0.85, 1.0)
+        toks = rng.integers(0, vocab, 120).astype(np.int32)
+        k = int(120 * rep_frac)
+        toks[-k:] = 7
+        if not s.check(toks).ok:
+            caught += 1
+    repetition = caught / n_rep * 100
+
+    rows = [
+        ["oversized input (10x ctx)", f"{oversized:.1f}%", "none",
+         f"{PAPER['oversized']}%"],
+        ["malformed encoding", f"{malformed:.1f}%", "none",
+         f"{PAPER['malformed']}%"],
+        ["rapid-fire (DDoS)", f"{ddos_blocked:.1f}%", "rate-limited",
+         f"{PAPER['ddos']}%"],
+        ["repetition-inducing", f"{repetition:.1f}%", "halted",
+         f"{PAPER['repetition']}%"],
+    ]
+    if verbose:
+        print(fmt_table(["attack", "blocked (ours)", "system impact",
+                         "paper"], rows, "Table 12: adversarial robustness"))
+    return {"oversized_pct": oversized, "malformed_pct": malformed,
+            "ddos_pct": ddos_blocked, "repetition_pct": repetition,
+            "all_structural_blocked": oversized == 100 and malformed == 100}

@@ -1,0 +1,102 @@
+"""Paper Table 1 + Table 2: scaling-exponent beta stability across the five
+model families, with bootstrap CIs and sample-range sensitivity."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import empirical_coverage, fit_power_law, simulate_outcomes
+from benchmarks.common import PAPER_TABLE16, fmt_table
+
+PAPER_BETAS = {"gpt2-125m": (0.68, (0.64, 0.72), 0.994),
+               "granite-350m": (0.71, (0.67, 0.75), 0.991),
+               "qwen2-0.5b": (0.69, (0.65, 0.73), 0.993),
+               "llama-3.2-1b": (0.72, (0.68, 0.76), 0.996),
+               "lfm2-2.6b": (0.70, (0.66, 0.74), 0.995)}
+
+
+def run(verbose: bool = True, include_real: bool = True) -> Dict:
+    rows: List = []
+    betas = []
+    for i, (model, refs) in enumerate(PAPER_TABLE16.items()):
+        target = refs[1] / 100.0       # energy-aware pass@20
+        out = simulate_outcomes(n_tasks=1500, n_samples=20,
+                                target_cov=target, seed=100 + i)
+        ks = [1, 2, 5, 10, 15, 20]
+        cov = empirical_coverage(out, ks)
+        fit = fit_power_law(ks, [cov[k] for k in ks], n_bootstrap=1000,
+                            seed=i)
+        betas.append(fit.beta)
+        pb, pci, pr2 = PAPER_BETAS[model]
+        rows.append([model, f"{fit.beta:.2f}",
+                     f"[{fit.beta_ci[0]:.2f}, {fit.beta_ci[1]:.2f}]",
+                     f"{fit.r2:.3f}", f"{pb:.2f}",
+                     f"[{pci[0]:.2f}, {pci[1]:.2f}]", f"{pr2:.3f}"])
+    mean_beta = float(np.mean(betas))
+    rows.append(["MEAN", f"{mean_beta:.2f}", "", "", "0.70", "", "0.994"])
+
+    # Table 2: sensitivity to sample-budget range
+    sens_rows = []
+    out_big = simulate_outcomes(n_tasks=1500, n_samples=100, target_cov=0.70,
+                                seed=100)
+    for lo, hi in [(1, 10), (1, 20), (5, 50), (10, 100)]:
+        ks = sorted({k for k in (lo, lo * 2, (lo + hi) // 2,
+                                 int(hi * 0.75), hi)})
+        cov = empirical_coverage(out_big, ks)
+        fit = fit_power_law(ks, [cov[k] for k in ks], n_bootstrap=0)
+        sens_rows.append([f"S in [{lo}, {hi}]", f"{fit.beta:.2f}"])
+
+    # REAL-model validation: train a tiny model on the verifiable arithmetic
+    # task, sample with the actual serving engine, fit beta from genuine
+    # pass@k outcomes (not simulation). Coverage is high (easy task), so the
+    # curve is in its saturation regime; we check the fit machinery and the
+    # monotone saturating shape rather than the 0.7 exponent itself.
+    real = _real_model_fit() if include_real else None
+
+    if verbose:
+        print(fmt_table(
+            ["model", "beta (ours)", "95% CI (ours)", "R2 (ours)",
+             "beta (paper)", "95% CI (paper)", "R2 (paper)"],
+            rows, "Table 1: scaling exponent stability"))
+        print(fmt_table(["sample range", "beta"], sens_rows,
+                        "Table 2: sensitivity to sample-budget range"))
+        if real is not None:
+            print(f"\n   REAL sampling run (tiny model, arith task): "
+                  f"beta={real['beta']:.2f} R2={real['r2']:.3f} "
+                  f"cov@16={real['cov16']:.2f} (saturation regime)")
+    out = {"mean_beta": mean_beta, "betas": betas,
+           "in_paper_band": bool(0.64 <= mean_beta <= 0.76)}
+    if real is not None:
+        out["real_run"] = real
+    return out
+
+
+def _real_model_fit():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import run_pass_at_k, fit_power_law
+    from repro.data import ArithGenerator, DataConfig, data_iterator
+    from repro.models import ArchConfig, Model
+    from repro.serving import ServingEngine
+    from repro.training import AdamWConfig, train
+
+    cfg = ArchConfig(name="arith-beta", arch_type="dense", n_layers=2,
+                     d_model=96, n_heads=4, n_kv_heads=2, d_ff=192,
+                     vocab_size=16)
+    model = Model(cfg, dtype=jnp.float32)
+    dc = DataConfig(vocab_size=16, seq_len=24, batch_size=32, kind="arith")
+    params, _ = train(model, AdamWConfig(lr=3e-3, warmup_steps=10,
+                                         total_steps=100),
+                      data_iterator(dc), 100)
+    gen = ArithGenerator(dc)
+    engine = ServingEngine(model, params, max_new_tokens=2, temperature=1.3)
+    rng = np.random.default_rng(0)
+    tasks = [gen.make_prompt(rng) for _ in range(24)]
+    tasks = [(p, (lambda s, a=a: gen.verify(s, a))) for p, a in tasks]
+    res = run_pass_at_k(engine, tasks, n_samples=16, budgets=(1, 2, 4, 8, 16))
+    ks = sorted(res.coverage_by_k)
+    fit = fit_power_law(ks, [res.coverage_by_k[k] for k in ks],
+                        n_bootstrap=200)
+    return {"beta": fit.beta, "r2": fit.r2,
+            "cov16": res.coverage_by_k[16]}

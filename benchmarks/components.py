@@ -1,0 +1,96 @@
+"""Paper Table 4: component contribution analysis — progressively enable QEIL
+features on GPT-2 and measure (pass@k, energy, IPW)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import (Constraints, CoverageParams, GreedyOrchestrator,
+                        RunMetrics, Workload, coverage, decompose,
+                        homogeneous_assignment, plan_costs)
+from repro.core.devices import EDGE_GPU_NVIDIA, EDGE_NPU, EDGE_PLATFORM
+from repro.configs.paper_models import GPT2_125M
+from repro.models import Model
+from benchmarks.common import (PAPER_WORKLOAD, effective_samples, fmt_table,
+                               standard_plan)
+
+PAPER_ROWS = {
+    "baseline (GPU-only)": (59.5, 43.1, 0.149),
+    "+ device ranking": (61.2, 38.7, 0.178),
+    "+ prefill/decode split": (65.8, 29.4, 0.412),
+    "+ greedy layer assignment": (68.3, 25.1, 0.584),
+    "+ adaptive sample budget": (69.2, 23.4, 0.672),
+    "+ safety constraints": (70.0, 22.5, 0.718),
+}
+
+
+def run(verbose: bool = True) -> Dict:
+    cfg = GPT2_125M
+    N_m = Model(cfg).param_count() / 1e6
+    cov_params = CoverageParams.calibrated(N_m, target_cov=0.595)
+    w = PAPER_WORKLOAD
+    w8 = Workload(batch=w.batch, prompt_tokens=w.prompt_tokens,
+                  decode_tokens=w.decode_tokens, samples=w.samples,
+                  bytes_per_param=1.0)
+    stages = decompose(cfg, w)
+    stages8 = decompose(cfg, w8)
+    base = plan_costs(stages, homogeneous_assignment(stages, EDGE_GPU_NVIDIA),
+                      "bf16", w)
+    sla = 0.95 * base.makespan_s
+
+    plans = {}
+    plans["baseline (GPU-only)"] = (base, 20.0, 1.0)
+
+    # + device ranking: whole model on the top-ranked device that fits
+    ranked = GreedyOrchestrator(EDGE_PLATFORM).ranked_devices()
+    total_bytes = sum(s.param_bytes for s in stages)
+    top = next(d for d in ranked if total_bytes <= d.mem_cap * 0.9)
+    pc = plan_costs(stages, homogeneous_assignment(stages, top), "bf16", w)
+    plans["+ device ranking"] = (pc, 20.0, 1.0)
+
+    # + prefill/decode split: phase-level disaggregation (prefill -> GPU,
+    # decode -> most energy-efficient fitting device), fp8 decode path
+    mapping = {}
+    for st in stages8:
+        mapping[st.name] = EDGE_GPU_NVIDIA if st.phase in ("prefill", "embed",
+                                                           "head") \
+            else EDGE_NPU
+    pc = plan_costs(stages8, mapping, "fp8", w8)
+    plans["+ prefill/decode split"] = (pc, 20.0, 1.0)
+
+    # + greedy layer assignment: the full orchestrator
+    greedy = GreedyOrchestrator(EDGE_PLATFORM,
+                                Constraints(latency_sla_s=sla), quant="fp8")
+    a = greedy.assign(cfg, w8)
+    plans["+ greedy layer assignment"] = (a.costs, 20.0, 1.0)
+
+    # + adaptive sample budget: reinvest energy savings as samples
+    s_eff = effective_samples(20, base.energy_j / a.costs.energy_j)
+    plans["+ adaptive sample budget"] = (a.costs, s_eff, 1.0)
+
+    # + safety constraints: prevents hardware thermal throttling; without it
+    # the GPU duty-cycles (paper Table 10: 47 events, +9.8% effective time &
+    # energy on GPU stages). Modeled as removing that penalty.
+    plans["+ safety constraints"] = (a.costs, s_eff, 1.0)
+    thermal_penalty = 1.098   # applied to every config EXCEPT the last
+
+    rows, results = [], {}
+    for i, (name, (pc, s_eff, _)) in enumerate(plans.items()):
+        pen = 1.0 if name == "+ safety constraints" else thermal_penalty
+        energy = pc.energy_j * pen
+        cov = coverage(s_eff, N_m, 256.0, cov_params)
+        ipw = cov / max(pc.avg_power_w, 1e-9)
+        results[name] = {"coverage": cov, "energy_j": energy, "ipw": ipw}
+        p = PAPER_ROWS[name]
+        rows.append([name, f"{cov * 100:.1f}", f"{energy / 1e3:.2f}",
+                     f"{ipw:.3f}", f"{p[0]}/{p[1]}/{p[2]}"])
+
+    monotone_energy = all(
+        results[a_]["energy_j"] >= results[b_]["energy_j"] * 0.98
+        for a_, b_ in zip(list(plans), list(plans)[1:]))
+    if verbose:
+        print(fmt_table(["configuration", "pass@k %", "energy kJ", "IPW",
+                         "paper (cov/E/IPW)"],
+                        rows, "Table 4: component contribution analysis"))
+        print(f"   energy monotonically decreasing: {monotone_energy}")
+    return {"monotone_energy": monotone_energy,
+            "final_coverage": results["+ safety constraints"]["coverage"]}

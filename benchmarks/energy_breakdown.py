@@ -1,0 +1,52 @@
+"""Paper Table 7 / Figure 2: energy breakdown by phase, standard vs
+energy-aware execution on GPT-2."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.paper_models import GPT2_125M
+from benchmarks.common import (PAPER_WORKLOAD, energy_aware_plan, fmt_table,
+                               standard_plan)
+
+PAPER = {"total": (43057.7, 22487.8, -47.8), "prefill": (12450.2, 8234.1, -33.9),
+         "decode": (28892.5, 12876.4, -55.4), "overhead": (1715.0, 1377.3, -19.7)}
+
+
+def run(verbose: bool = True) -> Dict:
+    std = standard_plan(GPT2_125M)
+    ea = energy_aware_plan(GPT2_125M)
+
+    pe_std = std.phase_energy()
+    pe_ea = ea.costs.phase_energy()
+
+    def grp(pe):
+        decode = pe.get("decode", 0.0)
+        prefill = pe.get("prefill", 0.0)
+        overhead = pe.get("embed", 0.0) + pe.get("head", 0.0) + \
+            pe.get("transfer", 0.0)
+        return {"prefill": prefill, "decode": decode, "overhead": overhead,
+                "total": prefill + decode + overhead}
+
+    g_std, g_ea = grp(pe_std), grp(pe_ea)
+    rows = []
+    deltas, saved = {}, {}
+    for phase in ("total", "prefill", "decode", "overhead"):
+        d = (g_ea[phase] / g_std[phase] - 1) * 100 if g_std[phase] else 0.0
+        deltas[phase] = d
+        saved[phase] = g_std[phase] - g_ea[phase]
+        p = PAPER[phase]
+        rows.append([phase, f"{g_std[phase]:.1f}", f"{g_ea[phase]:.1f}",
+                     f"{d:+.1f}%", f"{saved[phase]:.0f} J",
+                     f"{p[2]:+.1f}%"])
+    # the paper's key insight is about the magnitude of decode savings —
+    # decode is where most joules live, so most joules saved come from it.
+    decode_dominates = saved["decode"] >= saved["prefill"]
+    if verbose:
+        print(fmt_table(["phase", "standard J", "energy-aware J", "delta %",
+                         "saved J", "paper delta"],
+                        rows, "Table 7: energy breakdown by phase (GPT-2)"))
+        print(f"   decode savings dominate in joules (paper's key insight): "
+              f"{decode_dominates} "
+              f"({saved['decode']:.0f} J vs {saved['prefill']:.0f} J)")
+    return {"deltas": deltas, "saved_j": saved,
+            "decode_dominates": bool(decode_dominates)}

@@ -1,0 +1,53 @@
+"""Paper Table 11: fault tolerance — recovery from simulated device failures
+with the orchestrator redistributing stages."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (Constraints, GreedyOrchestrator, HealthMonitor,
+                        Workload)
+from repro.core.devices import EDGE_PLATFORM
+from repro.configs.paper_models import GPT2_125M
+from benchmarks.common import PAPER_WORKLOAD, fmt_table
+
+SCENARIOS = [
+    ("NPU failure", ["intel-ai-boost-npu"], (78, -31)),
+    ("GPU failure", ["nvidia-rtx-pro-5000"], (124, -58)),
+    ("both GPU failure", ["nvidia-rtx-pro-5000", "intel-graphics-gpu"],
+     (156, -72)),
+    ("NPU + 1 GPU failure", ["intel-ai-boost-npu", "nvidia-rtx-pro-5000"],
+     (98, -64)),
+]
+
+
+def run(verbose: bool = True) -> Dict:
+    w = PAPER_WORKLOAD
+    orch = GreedyOrchestrator(EDGE_PLATFORM,
+                              Constraints(latency_budget_factor=1.5))
+    healthy_plan = orch.assign(GPT2_125M, w)
+
+    rows: List = []
+    all_recovered = True
+    zero_loss = True
+    for name, failed, paper in SCENARIOS:
+        hm = HealthMonitor(EDGE_PLATFORM)
+        rec = None
+        for i, dev in enumerate(failed):
+            rec = hm.fail_device(dev, now_s=float(i) * 0.01,
+                                 inflight_queries=64)
+        plan = orch.reassign_on_failure(GPT2_125M, w, failed=failed)
+        ok = bool(plan.mapping)
+        all_recovered &= ok
+        zero_loss &= rec.queries_lost == 0
+        tput_delta = (healthy_plan.latency_s / plan.latency_s - 1) * 100 \
+            if ok else -100.0
+        rows.append([name, f"{rec.recovery_ms:.0f}",
+                     f"{tput_delta:+.0f}%", rec.queries_lost,
+                     f"{paper[0]} ms / {paper[1]}% / 0"])
+    if verbose:
+        print(fmt_table(["scenario", "recovery ms", "throughput delta",
+                         "queries lost", "paper (rec/tput/lost)"],
+                        rows, "Table 11: fault tolerance"))
+        print(f"   100% recovery: {all_recovered}, zero query loss: "
+              f"{zero_loss}")
+    return {"all_recovered": all_recovered, "zero_query_loss": zero_loss}

@@ -1,0 +1,102 @@
+"""Paper Table 3: controlled heterogeneity ablation — homogeneous GPU / NPU /
+CPU vs QEIL heterogeneous orchestration, GPT-2 (125M), S=20, WikiText scale.
+
+Coverage mechanism (documented reproduction decision, EXPERIMENTS.md §Perf):
+the paper's +10.5pp coverage for heterogeneous execution comes from its
+adaptive sample budget — energy saved per sample is reinvested as extra
+samples at iso-energy. We reproduce exactly that: S_eff = S * (E_std/E_het),
+coverage from the per-model calibrated Formalism 1.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import (CoverageParams, RunMetrics, Workload, coverage,
+                        cost_total, decompose, homogeneous_assignment,
+                        plan_costs)
+from repro.core.devices import (EDGE_CPU, EDGE_GPU_NVIDIA, EDGE_NPU,
+                                EDGE_PLATFORM)
+from repro.configs.paper_models import GPT2_125M
+from repro.models import Model
+from benchmarks.common import (PAPER_WORKLOAD, N_QUERIES, effective_samples,
+                               energy_aware_plan, fmt_table, standard_plan)
+
+PAPER_ROWS = {
+    "homog GPU": (59.5, 43.1, 1.73, 0.149, 402.5, 16.85),
+    "homog NPU": (58.2, 31.8, 2.41, 0.312, 186.4, 14.21),
+    "homog CPU": (57.8, 38.6, 3.12, 0.187, 309.2, 12.94),
+    "QEIL heterogeneous": (70.0, 22.5, 1.34, 0.718, 83.5, 20.74),
+}
+
+
+def _metrics(cfg, plan_cost, S_eff: float, cov_params, n_queries=N_QUERIES,
+             samples=20) -> RunMetrics:
+    cov = coverage(S_eff, Model(cfg).param_count() / 1e6, 256.0, cov_params)
+    total_tokens = n_queries * samples * (128 + 256)
+    cost = cost_total(samples * n_queries, plan_cost.energy_j,
+                      EDGE_GPU_NVIDIA)["total"] / n_queries * 1000
+    return RunMetrics(
+        coverage=cov, accuracy=coverage(1, Model(cfg).param_count() / 1e6,
+                                        256.0, cov_params),
+        energy_j=plan_cost.energy_j,
+        latency_s=plan_cost.makespan_s / (n_queries * samples),
+        power_w=plan_cost.avg_power_w,
+        throughput_tps=total_tokens / max(plan_cost.makespan_s, 1e-9),
+        cost_usd_per_1k=cost)
+
+
+def run(verbose: bool = True) -> Dict:
+    cfg = GPT2_125M
+    N_m = Model(cfg).param_count() / 1e6
+    # calibrate coverage params so standard S=20 gives the paper's 59.5%
+    cov_params = CoverageParams.calibrated(N_m, target_cov=0.595)
+    w = PAPER_WORKLOAD
+
+    stages = decompose(cfg, w)
+    plans = {
+        "homog GPU": plan_costs(stages, homogeneous_assignment(
+            stages, EDGE_GPU_NVIDIA), "bf16", w),
+        "homog NPU": plan_costs(stages, homogeneous_assignment(
+            stages, EDGE_NPU), "bf16", w),
+        "homog CPU": plan_costs(stages, homogeneous_assignment(
+            stages, EDGE_CPU), "bf16", w),
+    }
+    het = energy_aware_plan(cfg, w)
+    plans["QEIL heterogeneous"] = het.costs
+
+    e_std = plans["homog GPU"].energy_j
+    rows = []
+    results = {}
+    for name, pc in plans.items():
+        s_eff = effective_samples(20, e_std / pc.energy_j) \
+            if name == "QEIL heterogeneous" else 20.0
+        m = _metrics(cfg, pc, s_eff, cov_params)
+        results[name] = m
+        p = PAPER_ROWS[name]
+        rows.append([name, f"{m.coverage * 100:.1f}",
+                     f"{m.energy_j / 1e3:.1f}",
+                     f"{m.latency_s * 1e3:.3f}",
+                     f"{m.ipw:.3f}", f"{m.power_w:.1f}", f"{m.ppp:.2f}",
+                     f"{p[0]:.1f}/{p[1]:.1f}kJ"])
+
+    base = results["homog GPU"]
+    het_m = results["QEIL heterogeneous"]
+    deltas = {
+        "coverage_pp": (het_m.coverage - base.coverage) * 100,
+        "energy_pct": (het_m.energy_j / base.energy_j - 1) * 100,
+        "latency_pct": (het_m.latency_s / base.latency_s - 1) * 100,
+        "ipw_x": het_m.ipw / base.ipw,
+    }
+    if verbose:
+        print(fmt_table(
+            ["config", "pass@k %", "energy kJ", "lat ms", "IPW", "power W",
+             "PPP", "paper(cov/E)"],
+            rows, "Table 3: controlled heterogeneity ablation (GPT-2, S=20)"))
+        print(f"   deltas vs homog GPU: {deltas}")
+        print("   paper deltas: +10.5pp coverage, -47.7% energy, "
+              "-22.5% latency, 4.8x IPW")
+    return {"deltas": deltas,
+            "heterogeneous_wins_energy":
+                het_m.energy_j < min(p.energy_j for n, p in results.items()
+                                     if n != "QEIL heterogeneous"),
+            "coverage_gain_pp": deltas["coverage_pp"]}

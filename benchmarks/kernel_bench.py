@@ -1,0 +1,88 @@
+"""Kernel microbenchmarks: interpret-mode us/call on CPU (correctness-path
+cost) + modeled TPU v5e roofline time for the production shapes each kernel
+serves."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.devices import TPU_V5E
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.ssd_scan.ops import ssd_chunk
+from benchmarks.common import fmt_table
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _tpu_roofline_us(flops: float, bytes_moved: float) -> float:
+    t = max(flops / (TPU_V5E.peak_flops * TPU_V5E.util),
+            bytes_moved / (TPU_V5E.mem_bw * TPU_V5E.util))
+    return t * 1e6
+
+
+def run(verbose: bool = True) -> Dict:
+    rows = []
+    results = {}
+
+    # flash attention: one prefill tile set (small CPU shape; model the 32k)
+    B, S, H, D = 1, 256, 4, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    us = _time(flash_attention_pallas, q, k, v, block_q=128, block_k=128)
+    # production shape: qwen2-72b prefill_32k per chip slice
+    Sp, Hp = 32768, 4  # heads per chip after sharding
+    fl = 4.0 * Sp * Sp / 2 * Hp * 128
+    by = (3 * Sp * Hp * 128) * 2
+    rows.append(["flash_attention", f"{us:.0f}",
+                 f"{_tpu_roofline_us(fl, by):.0f} (32k tile/chip)"])
+    results["flash_attention_us"] = us
+
+    # decode attention: cache streaming
+    W = 1024
+    kc = jax.random.normal(ks[1], (2, W, 2, 64), jnp.float32)
+    vc = jax.random.normal(ks[2], (2, W, 2, 64), jnp.float32)
+    qd = jax.random.normal(ks[0], (2, 1, 4, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(W)[None], (2, W)).astype(jnp.int32)
+    qpos = jnp.full((2,), W - 1, jnp.int32)
+    us = _time(decode_attention_pallas, qd, kc, vc, pos, qpos, block_k=256)
+    fl_d = 4.0 * 32768 * 8 * 128 * 8   # decode_32k per chip: 8 batch x kv8
+    by_d = 32768 * 2 * 8 * 128 * 2 * 8
+    rows.append(["decode_attention", f"{us:.0f}",
+                 f"{_tpu_roofline_us(fl_d, by_d):.0f} (32k cache/chip)"])
+    results["decode_attention_us"] = us
+
+    # ssd chunk
+    Bh, nc, Q, P, N = 2, 4, 64, 32, 64
+    x = jax.random.normal(ks[0], (2, nc, Q, 2, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, nc, Q, 2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    dA = dt * A[None, None, None]
+    dAcs = jnp.cumsum(dA, axis=2)
+    Bm = jax.random.normal(ks[1], (2, nc, Q, 2, N), jnp.float32)
+    Cm = jax.random.normal(ks[2], (2, nc, Q, 2, N), jnp.float32)
+    us = _time(ssd_chunk, x, dt, dA, dAcs, Bm, Cm)
+    # mamba2-370m prefill_32k per chip: 32 heads/16 = 2 heads x 32k tokens
+    fl_s = 2 * (32768 / 256) * (2 * 256 * 256 * (64 + 128))
+    by_s = 2 * 32768 * (64 + 2 * 128) * 4
+    rows.append(["ssd_scan", f"{us:.0f}",
+                 f"{_tpu_roofline_us(fl_s, by_s):.0f} (32k scan/chip)"])
+    results["ssd_scan_us"] = us
+
+    if verbose:
+        print(fmt_table(["kernel", "interpret us/call",
+                         "modeled TPU us (prod shape)"],
+                        rows, "Kernel microbenchmarks"))
+    return results

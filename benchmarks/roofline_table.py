@@ -1,0 +1,141 @@
+"""Deliverable (g): the roofline table — three terms per (arch x shape) from
+the single-pod dry-run artifacts, dominant bottleneck, MODEL_FLOPS ratio.
+
+Reads experiments/dryrun/*.json produced by repro.launch.dryrun.
+
+Conventions (documented in EXPERIMENTS.md §Roofline):
+  * XLA's cost_analysis on the SPMD-partitioned module reports PER-DEVICE
+    FLOPs/bytes and does NOT multiply while-loop (scan) trip counts; we
+    re-scale by the scan trip count (n_scanned_super_blocks) and chip count
+    to obtain whole-program totals, and report the raw numbers alongside.
+  * collective bytes are payload bytes of every collective op result,
+    also per-device x chips.
+  * MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core.roofline import RooflineTerms, terms_from_counts
+from repro.core.devices import TPU_V5E
+from repro.configs import get_config
+from repro.models.cache import n_scanned_super_blocks
+from repro.models.config import INPUT_SHAPES
+from benchmarks.common import fmt_table
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "dryrun")
+
+
+def model_flops(art: Dict) -> float:
+    """Analytic useful FLOPs for the workload."""
+    n_active = art["active_param_count"]
+    shape = INPUT_SHAPES[art["shape"]]
+    if art["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if art["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1     # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def scaled_counts(art: Dict) -> Optional[Dict]:
+    """Whole-program FLOPs/bytes/collective-bytes from the artifact."""
+    cost = art.get("cost_analysis", {})
+    if "error" in cost or "flops" not in cost:
+        return None
+    cfg = get_config(art["arch"])
+    trip = n_scanned_super_blocks(cfg)
+    chips = art["n_chips"]
+    # cost_analysis: per-device module, scan body counted once -> scale.
+    flops = cost["flops"] * trip * chips
+    bytes_moved = cost.get("bytes accessed", 0.0) * trip * chips
+    coll = art["collective_bytes"]["total"] * trip * chips
+    return {"flops": flops, "bytes": bytes_moved, "collective": coll,
+            "raw_flops": cost["flops"], "trip": trip}
+
+
+def analyze(art: Dict) -> Optional[Dict]:
+    sc = scaled_counts(art)
+    if sc is None:
+        return None
+    terms = terms_from_counts(sc["flops"], sc["bytes"], sc["collective"],
+                              art["n_chips"], TPU_V5E)
+    mf = model_flops(art)
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "terms": terms, "model_flops": mf,
+        "flops_ratio": mf / sc["flops"] if sc["flops"] else float("nan"),
+        "counts": sc,
+    }
+
+
+def load_artifacts(mesh: str = "single") -> List[Dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def load_variants(mesh: str = "single") -> List[Dict]:
+    """Tagged §Perf variant artifacts (…__<mesh>__<tag>.json)."""
+    arts = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR,
+                                              f"*__{mesh}__*.json"))):
+        with open(path) as f:
+            a = json.load(f)
+        a["tag"] = os.path.basename(path).split("__")[-1].replace(".json", "")
+        arts.append(a)
+    return arts
+
+
+def run(verbose: bool = True, mesh: str = "single") -> Dict:
+    arts = load_artifacts(mesh)
+    rows = []
+    analyzed = []
+    failures = []
+    for art in arts:
+        if "error" in art:
+            failures.append((art["arch"], art["shape"]))
+            continue
+        a = analyze(art)
+        if a is None:
+            failures.append((art["arch"], art["shape"]))
+            continue
+        analyzed.append(a)
+        t: RooflineTerms = a["terms"]
+        rows.append([a["arch"], a["shape"],
+                     f"{t.compute_s * 1e3:.2f}", f"{t.memory_s * 1e3:.2f}",
+                     f"{t.collective_s * 1e3:.2f}", t.dominant,
+                     f"{a['flops_ratio']:.2f}"])
+    if verbose:
+        print(fmt_table(
+            ["arch", "shape", "compute ms", "memory ms", "collective ms",
+             "dominant", "MODEL/HLO"],
+            rows, f"Roofline terms per (arch x shape), {mesh} pod "
+                  f"({len(analyzed)} ok, {len(failures)} missing/failed)"))
+        vrows = []
+        for art in load_variants(mesh):
+            if "error" in art:
+                continue
+            a = analyze(art)
+            if a is None:
+                continue
+            t = a["terms"]
+            vrows.append([a["arch"], a["shape"], art["tag"],
+                          f"{t.compute_s * 1e3:.2f}",
+                          f"{t.memory_s * 1e3:.2f}",
+                          f"{t.collective_s * 1e3:.2f}", t.dominant])
+        if vrows:
+            print(fmt_table(
+                ["arch", "shape", "variant", "compute ms", "memory ms",
+                 "collective ms", "dominant"],
+                vrows, "§Perf hillclimb variants (EXPERIMENTS.md §Perf)"))
+    return {"n_analyzed": len(analyzed), "n_failed": len(failures),
+            "failures": failures, "analyzed": analyzed}

@@ -1,0 +1,39 @@
+"""Pareto-optimal multi-objective orchestration (the v2 title's headline):
+sweep sample budgets and latency SLAs, compute the non-dominated
+(energy, latency, coverage) frontier, and show where the paper's operating
+points sit relative to what the roofline actually admits.
+
+Run: PYTHONPATH=src python examples/pareto_orchestration.py
+"""
+from repro.core import (ParetoOrchestrator, Workload, decompose,
+                        homogeneous_assignment, hypervolume_2d, plan_costs)
+from repro.core.devices import EDGE_GPU_NVIDIA, EDGE_PLATFORM
+from repro.configs.paper_models import GPT2_125M
+
+w = Workload(batch=100, prompt_tokens=128, decode_tokens=256, samples=20)
+
+po = ParetoOrchestrator(EDGE_PLATFORM)
+front = po.frontier(GPT2_125M, w, sample_budgets=(5, 10, 20, 40),
+                    n_latency_points=6)
+
+stages = decompose(GPT2_125M, w)
+gpu = plan_costs(stages, homogeneous_assignment(stages, EDGE_GPU_NVIDIA),
+                 workload=w)
+print(f"homogeneous GPU reference: {gpu.energy_j:.1f} J, "
+      f"{gpu.makespan_s * 1e3:.0f} ms, S=20\n")
+
+print(f"{'S':>4} {'energy J':>10} {'latency ms':>11} {'coverage':>9} "
+      f"{'devices'}")
+for c in sorted(front, key=lambda c: c["energy_j"]):
+    a = c["assignment"]
+    print(f"{c['samples']:>4} {c['energy_j']:>10.1f} "
+          f"{c['latency_s'] * 1e3:>11.0f} {c['coverage']:>9.3f} "
+          f"{','.join(d.split('-')[0] for d in a.device_names())}")
+
+pts = [(c["energy_j"], c["latency_s"]) for c in front]
+hv = hypervolume_2d(pts, ref=(gpu.energy_j * 2, gpu.makespan_s * 2))
+print(f"\nfrontier size: {len(front)}  "
+      f"2-D hypervolume vs 2x-GPU reference: {hv:.2f}")
+print("note: no single frontier point reaches the paper's claimed "
+      "(-47.7% energy AND -22.5% latency AND +10.5pp coverage) "
+      "simultaneously — see EXPERIMENTS.md §Perf for the analysis.")

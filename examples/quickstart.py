@@ -1,0 +1,50 @@
+"""QEIL quickstart: the paper's pipeline in ~60 lines.
+
+1. fit the coverage scaling formalism from sampled outcomes,
+2. decompose an inference workload into stages,
+3. orchestrate across the heterogeneous edge platform,
+4. compare against homogeneous baselines with IPW/ECE/PPP.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (Constraints, GreedyOrchestrator, Workload,
+                        decompose, empirical_coverage, fit_power_law,
+                        homogeneous_assignment, plan_costs,
+                        simulate_outcomes)
+from repro.core.devices import EDGE_GPU_NVIDIA, EDGE_PLATFORM
+from repro.configs.paper_models import GPT2_125M
+
+# --- 1. Formalism 1: fit coverage scaling C(S) = 1 - exp(-alpha S^beta)
+outcomes = simulate_outcomes(n_tasks=1000, n_samples=20, target_cov=0.70)
+ks = [1, 2, 5, 10, 20]
+cov = empirical_coverage(outcomes, ks)
+fit = fit_power_law(ks, [cov[k] for k in ks])
+print(f"coverage scaling: alpha={fit.alpha:.4f} beta={fit.beta:.2f} "
+      f"(paper: ~0.70), R2={fit.r2:.3f}")
+print("  pass@k:", {k: round(v, 3) for k, v in cov.items()})
+
+# --- 2. decompose a 20-sample workload into stages
+w = Workload(batch=100, prompt_tokens=128, decode_tokens=256, samples=20)
+stages = decompose(GPT2_125M, w)
+pre = [s for s in stages if s.phase == "prefill"][0]
+dec = [s for s in stages if s.phase == "decode"][0]
+print(f"\nstage intensities (FLOP/byte): prefill {pre.intensity:.0f} "
+      f"(compute-bound), decode {dec.intensity:.1f} (memory-bound)")
+
+# --- 3. orchestrate
+orch = GreedyOrchestrator(EDGE_PLATFORM,
+                          Constraints(latency_budget_factor=1.0))
+plan = orch.assign(GPT2_125M, w)
+print(f"\nQEIL plan: devices={plan.device_names()}")
+print(f"  energy {plan.energy_j:.1f} J, latency {plan.latency_s * 1e3:.1f} ms")
+
+# --- 4. compare with homogeneous GPU
+gpu = plan_costs(stages, homogeneous_assignment(stages, EDGE_GPU_NVIDIA),
+                 workload=w)
+print(f"homogeneous GPU: energy {gpu.energy_j:.1f} J, "
+      f"latency {gpu.makespan_s * 1e3:.1f} ms")
+print(f"==> heterogeneous delta: "
+      f"{(plan.energy_j / gpu.energy_j - 1) * 100:+.1f}% energy, "
+      f"{(plan.latency_s / gpu.makespan_s - 1) * 100:+.1f}% latency")

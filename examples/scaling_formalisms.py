@@ -1,0 +1,57 @@
+"""Scaling formalisms walkthrough: all five formalisms evaluated and the joint
+(N, S) exponent fit recovered from synthetic outcome data.
+
+Run: PYTHONPATH=src python examples/scaling_formalisms.py
+"""
+import numpy as np
+
+from repro.core import (CoverageParams, coverage, cost_total,
+                        device_task_match, energy_total, fit_coverage_joint,
+                        latency, samples_for_coverage)
+from repro.core.devices import EDGE_CPU, EDGE_GPU_NVIDIA, EDGE_NPU
+
+print("=== Formalism 1: coverage scaling ===")
+p = CoverageParams.calibrated(124.0, target_cov=0.70)
+for S in (1, 5, 20, 50):
+    print(f"  C(S={S:3d}, GPT-2, T=256) = {coverage(S, 124, 256, p):.3f}")
+print(f"  samples for 80% coverage: "
+      f"{samples_for_coverage(0.80, 124, 256, p):.1f}")
+
+print("\n=== Formalism 2: energy scaling (per device) ===")
+for dev in (EDGE_CPU, EDGE_NPU, EDGE_GPU_NVIDIA):
+    e = energy_total(20, 124, 256, "fp16", dev)
+    e8 = energy_total(20, 124, 256, "fp8", dev)
+    print(f"  {dev.name:28s}: {e:8.1f} J fp16, {e8:8.1f} J fp8")
+
+print("\n=== Formalism 3: latency decomposition ===")
+for dev in (EDGE_CPU, EDGE_GPU_NVIDIA):
+    lb = latency(S=20, T=256, N=124e6, device=dev, heterogeneous=True)
+    print(f"  {dev.name:28s}: prefill {lb.prefill_s * 1e3:7.2f} ms, "
+          f"decode {lb.decode_s * 1e3:8.2f} ms, overhead "
+          f"{lb.overhead_s * 1e3:.2f} ms")
+
+print("\n=== Formalism 4: cost scaling ===")
+c = cost_total(20, energy_joules=22500, device=EDGE_GPU_NVIDIA)
+print(f"  amortization ${c['amortization']:.2e}, energy ${c['energy']:.4f}, "
+      f"total ${c['total']:.4f} per workload")
+
+print("\n=== Formalism 5: roofline device-task matching ===")
+for intensity, stage in ((973, "prefill"), (2.1, "decode")):
+    for dev in (EDGE_GPU_NVIDIA, EDGE_NPU):
+        print(f"  {stage:8s} (I={intensity:6.1f}) on {dev.name:28s}: "
+              f"{device_task_match(intensity, dev)} "
+              f"(ridge {dev.ridge_point:.0f})")
+
+print("\n=== Joint (N, S) exponent recovery ===")
+true = CoverageParams(alpha=3e-4, beta_N=0.68, beta_S=0.73)
+N, S, C = [], [], []
+rng = np.random.default_rng(0)
+for n in (125, 350, 500, 1236, 2600):
+    for s in (1, 2, 5, 10, 20):
+        N.append(n)
+        S.append(s)
+        C.append(coverage(s, n, 256, true) * (1 + 0.01 * rng.standard_normal()))
+fit = fit_coverage_joint(N, S, C)
+print(f"  true beta_N={true.beta_N}, beta_S={true.beta_S}")
+print(f"  fit  beta_N={fit.beta_N:.3f}, beta_S={fit.beta_S:.3f}, "
+      f"R2={fit.r2:.4f}")

@@ -1,0 +1,50 @@
+"""Train a ~25M-parameter model for a few hundred steps on the synthetic
+Markov corpus, with checkpointing — exercising the full training substrate
+(optimizer, LR schedule, data pipeline, checkpoint save/restore).
+
+Run: PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, data_iterator
+from repro.models import ArchConfig, Model
+from repro.training import (AdamWConfig, latest_checkpoint,
+                            restore_checkpoint, save_checkpoint, train)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--d-model", type=int, default=256)
+ap.add_argument("--layers", type=int, default=4)
+args = ap.parse_args()
+
+cfg = ArchConfig(name="tiny-lm", arch_type="dense", n_layers=args.layers,
+                 d_model=args.d_model, n_heads=8, n_kv_heads=4,
+                 d_ff=args.d_model * 4, vocab_size=512)
+model = Model(cfg, dtype=jnp.float32)
+print(f"model: {model.param_count() / 1e6:.1f} M params")
+
+dc = DataConfig(vocab_size=512, seq_len=128, batch_size=16, kind="markov")
+ckpt_dir = tempfile.mkdtemp(prefix="qeil_ckpt_")
+
+params, info = train(
+    model, AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+    data_iterator(dc), args.steps, log_every=25,
+    checkpoint_fn=lambda step, p, o: save_checkpoint(ckpt_dir, step, p, o),
+    checkpoint_every=max(args.steps // 2, 1))
+
+for h in info["history"]:
+    print(f"  step {h['step']:4.0f}  loss {h['loss']:.4f}  "
+          f"lr {h['lr']:.2e}  {h['wall_s']:.0f}s")
+
+# restore round-trip
+ck = latest_checkpoint(ckpt_dir)
+step, restored, _ = restore_checkpoint(ck, model.param_specs())
+import numpy as np
+a = jax.tree.leaves(params)[0]
+b = jax.tree.leaves(restored)[0]
+assert np.allclose(np.asarray(a), np.asarray(b))
+print(f"\ncheckpoint round-trip OK at step {step} ({ck})")

@@ -1,0 +1,38 @@
+"""Pareto-front utilities for multi-objective orchestration (v2 title).
+
+All objectives are minimized; negate maximization objectives before calling.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+
+def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
+    """a dominates b: <= in every objective, < in at least one."""
+    le = all(x <= y for x, y in zip(a, b))
+    lt = any(x < y for x, y in zip(a, b))
+    return le and lt
+
+
+def pareto_front(points: Sequence[Sequence[float]]) -> List[int]:
+    """Indices of the non-dominated points (O(n^2), fine for config sweeps)."""
+    n = len(points)
+    out = []
+    for i in range(n):
+        if not any(dominates(points[j], points[i])
+                   for j in range(n) if j != i):
+            out.append(i)
+    return out
+
+
+def hypervolume_2d(points: Sequence[Tuple[float, float]],
+                   ref: Tuple[float, float]) -> float:
+    """2-D hypervolume (minimization) w.r.t. reference point — the scalar
+    'did the frontier move' metric used in EXPERIMENTS.md §Perf."""
+    front = sorted({tuple(points[i]) for i in pareto_front(points)
+                    if points[i][0] < ref[0] and points[i][1] < ref[1]})
+    hv = 0.0
+    for i, (x, y) in enumerate(front):
+        next_x = front[i + 1][0] if i + 1 < len(front) else ref[0]
+        hv += (next_x - x) * (ref[1] - y)
+    return hv

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (ArithGenerator, CopyGenerator, DataConfig,
+                                 MarkovGenerator, data_iterator, make_generator)
+
+__all__ = ["DataConfig", "MarkovGenerator", "ArithGenerator", "CopyGenerator",
+           "data_iterator", "make_generator"]

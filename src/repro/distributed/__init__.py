@@ -1,0 +1,3 @@
+from repro.distributed.sharding import ShardingPolicy
+
+__all__ = ["ShardingPolicy"]

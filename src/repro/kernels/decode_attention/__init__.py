@@ -1,0 +1,3 @@
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_cache)
+from repro.kernels.decode_attention.ref import decode_attention_ref

@@ -1,0 +1,118 @@
+"""Decode attention Pallas TPU kernel (single-token query vs. KV cache).
+
+This is the paper's memory-bound hot spot (Formalism 5: decode intensity ~1,
+route to bandwidth-optimal hardware). The kernel streams the KV cache exactly
+once per step — the bytes term the MLA latent cache and sliding-window variants
+shrink in the §Perf hillclimbs.
+
+Design:
+  * grid (batch, q_heads, kv_blocks); kv innermost so the flash-style running
+    (m, l, acc) scratch carries across cache tiles.
+  * BlockSpec tiles: cache k/v (1, block_k, 1, head_dim) per (batch, kv-head);
+    the per-slot validity mask comes from the absolute-position array the ring
+    cache maintains (pos >= 0, pos <= q_pos, window).
+  * q is tiny (1 row per head) — broadcast from VMEM; accumulation in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float,
+                   window: Optional[int], block_k: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)          # (1, hd) single q row
+    k = k_ref[0, :, 0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)          # (bk, hd)
+    slot_pos = pos_ref[0]                            # (bk,) absolute positions
+    q_pos = qpos_ref[0]                              # scalar in (1,) block
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (1, bk)
+    valid = (slot_pos >= 0) & (slot_pos <= q_pos)
+    if window is not None:
+        valid &= slot_pos > q_pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(valid[None, :], jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0] = (acc_scr[...] /
+                          jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, pos: jnp.ndarray,
+                            q_pos: jnp.ndarray, *,
+                            scale: Optional[float] = None,
+                            window: Optional[int] = None,
+                            block_k: int = 128,
+                            interpret: bool = True) -> jnp.ndarray:
+    """q (B, 1, H, D); k_cache/v_cache (B, W, Hkv, D); pos (B, W) absolute
+    positions per cache slot (-1 = empty); q_pos (B,) current positions.
+    Returns (B, 1, H, Dv)."""
+    B, S1, H, D = q.shape
+    assert S1 == 1, "decode kernel is single-token"
+    _, W, Hkv, Dv = v_cache.shape
+    group = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    bk = min(block_k, max(W, 8))
+    pad = (-W) % bk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    Wp = k_cache.shape[1]
+
+    grid = (B, H, Wp // bk)
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               block_k=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, 0, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, j, g=group: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, Dv),
+                         lambda b, h, j, g=group: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dv), lambda b, h, j: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, pos.astype(jnp.int32), q_pos.astype(jnp.int32))
+    return out

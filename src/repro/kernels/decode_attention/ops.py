@@ -1,0 +1,41 @@
+"""Jitted wrapper for decode attention. The model-level entry point accepts the
+boolean mask the reference attention uses and converts to the kernel's
+(pos, q_pos) form when the caller has them; the direct (pos, q_pos) API is the
+efficient path used by the serving engine."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import \
+    decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "block_k"))
+def decode_attention_cache(q, k_cache, v_cache, pos, q_pos, *,
+                           scale: Optional[float] = None,
+                           window: Optional[int] = None,
+                           block_k: int = 128) -> jnp.ndarray:
+    return decode_attention_pallas(q, k_cache, v_cache, pos, q_pos,
+                                   scale=scale, window=window,
+                                   block_k=block_k, interpret=not _on_tpu())
+
+
+def decode_attention(q, k_cache, v_cache, mask, *, scale=None):
+    """Mask-based compatibility shim for repro.models.attention: falls back to
+    the reference math (the mask already encodes positions/window)."""
+    import numpy as np
+    from repro.models.attention import sdpa
+    return sdpa(q, k_cache, v_cache, mask,
+                scale if scale is not None else q.shape[-1] ** -0.5)
+
+
+__all__ = ["decode_attention_cache", "decode_attention", "decode_attention_ref"]

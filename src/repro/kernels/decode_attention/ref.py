@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, pos: jnp.ndarray,
+                         q_pos: jnp.ndarray, *,
+                         scale: Optional[float] = None,
+                         window: Optional[int] = None) -> jnp.ndarray:
+    """q (B,1,H,D); caches (B,W,Hkv,Dv); pos (B,W); q_pos (B,)."""
+    B, _, H, D = q.shape
+    _, W, Hkv, Dv = v_cache.shape
+    if scale is None:
+        scale = D ** -0.5
+    g = H // Hkv
+    qg = q.reshape(B, 1, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    valid = (pos >= 0) & (pos <= q_pos[:, None])
+    if window is not None:
+        valid &= pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, Dv).astype(q.dtype)

@@ -1,0 +1,132 @@
+"""Flash attention Pallas TPU kernel (prefill hot path).
+
+Design (TPU-native, DESIGN.md §6):
+  * grid (batch, q_heads, q_blocks, k_blocks); the k dimension is innermost so
+    the online-softmax running state (m, l, acc) lives in VMEM scratch and is
+    carried across k steps — the canonical TPU flash pattern.
+  * BlockSpec tiles: q (1, 1, block_q, head_dim), k/v (1, 1, block_k, head_dim)
+    with the GQA head group folded into the kv index_map (head h reads kv head
+    h // group). block_q = block_k = 128 keeps the MXU matmuls 128-aligned and
+    the working set (2 tiles + f32 accumulators) well under VMEM.
+  * causal + sliding-window masks are applied per-tile from absolute positions.
+
+Numerics: scores and the softmax state are f32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < seq_len                          # padded tail
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                             # (bq, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q (B, Sq, H, D); k, v (B, Sk, Hkv, D'); returns (B, Sq, H, Dv).
+
+    Sq/Sk are padded to the block sizes internally; GQA via kv-head indexing.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    assert H % Hkv == 0
+    group = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    qt = jnp.moveaxis(q, 2, 1)                      # (B, H, Sq, D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sqp, Skp = qt.shape[2], kt.shape[2]
+
+    grid = (B, H, Sqp // bq, Skp // bk)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, block_q=bq, block_k=bk,
+                               seq_len=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dv),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, Dv), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)[:, :Sq]

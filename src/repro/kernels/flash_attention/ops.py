@@ -1,0 +1,33 @@
+"""Jitted public wrapper for the flash attention kernel.
+
+On CPU the Pallas kernel executes in interpret mode (the kernel body runs in
+Python/XLA for correctness validation); on TPU the same call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, block_q=block_q,
+                                  block_k=block_k, interpret=not _on_tpu())
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

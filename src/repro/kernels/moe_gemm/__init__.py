@@ -1,0 +1,2 @@
+from repro.kernels.moe_gemm.ops import moe_gemm
+from repro.kernels.moe_gemm.ref import moe_gemm_ref

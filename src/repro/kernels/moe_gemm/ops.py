@@ -1,0 +1,24 @@
+"""Jitted wrapper for the grouped expert GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm_pallas
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def moe_gemm(x, w, *, block_c: int = 128, block_f: int = 128,
+             block_d: int = 128) -> jnp.ndarray:
+    return moe_gemm_pallas(x, w, block_c=block_c, block_f=block_f,
+                           block_d=block_d, interpret=not _on_tpu())
+
+
+__all__ = ["moe_gemm", "moe_gemm_ref"]

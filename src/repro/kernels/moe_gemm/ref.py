@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x (E, C, d), w (E, d, f) -> (E, C, f) with f32 accumulation."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd_chunk
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref

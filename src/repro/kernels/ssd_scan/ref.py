@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the SSD chunk kernel (mirrors repro.models.ssm math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import segsum
+
+
+def ssd_chunk_ref(x, dt, dA, dAcs, B, C):
+    """Inputs (BH, nc, Q, ...) as in ssd_chunk_pallas; returns (Y_diag, states)."""
+    Lmat = jnp.exp(segsum(dA[..., 0]))                       # (BH,nc,Q,Q)
+    scores = jnp.einsum("icqn,icsn->icqs", C.astype(jnp.float32),
+                        B.astype(jnp.float32))
+    scores = scores * Lmat * dt[..., 0][:, :, None, :]
+    y = jnp.einsum("icqs,icsp->icqp", scores, x.astype(jnp.float32))
+    decay = jnp.exp(dAcs[:, :, -1:] - dAcs) * dt             # (BH,nc,Q,1)
+    states = jnp.einsum("icqn,icqp->icpn", B.astype(jnp.float32),
+                        (x * decay).astype(jnp.float32))
+    return y, states

@@ -1,0 +1,105 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input, per
+(architecture x input shape). Weak-type-correct, shardable, no device
+allocation: the multi-pod dry-run lowers against these.
+
+Shapes:
+  train_4k     -> train_step   (tokens + labels, full sequence)
+  prefill_32k  -> prefill      (tokens + fresh cache)
+  decode_32k   -> serve_step   (ONE new token against a seq_len cache)
+  long_500k    -> serve_step   (window/SSM cache; batch 1)
+
+long_500k policy (DESIGN.md §4): architectures with attention run the
+sliding-window variant (window 4096) at this shape — ``adapt_config`` applies
+the override — so the cache is O(window), not O(524288). SSM archs are
+natively O(1)-state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import make_cache
+from repro.models.config import ArchConfig, InputShape, INPUT_SHAPES
+
+LONG_CONTEXT_WINDOW = 4096
+
+
+def has_attention(cfg: ArchConfig) -> bool:
+    return "a" in cfg.pattern
+
+
+def adapt_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Per-shape architecture adaptation (the long_500k window override)."""
+    if shape.name == "long_500k" and has_attention(cfg) and not cfg.attn_window:
+        return cfg.with_overrides(attn_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _token_spec(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.n_codebooks > 1:
+        return jax.ShapeDtypeStruct((batch, seq, cfg.n_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def _extras(cfg: ArchConfig, batch: int, seq: int, dtype) -> Dict:
+    out = {}
+    if cfg.frontend == "vision":
+        nv = min(cfg.n_vision_tokens, seq)
+        out["vision_embeds"] = jax.ShapeDtypeStruct((batch, nv, cfg.d_model),
+                                                    dtype)
+    if cfg.cross_attention:
+        out["cond_memory"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_cond_tokens, cfg.d_model), dtype)
+    return out
+
+
+def _positions_spec(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.mrope_sections:
+        return jax.ShapeDtypeStruct((batch, seq, 3), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype=jnp.bfloat16, cache_dtype=None) -> Tuple[Dict, Dict]:
+    """Returns (batch_specs, cache_specs). cache_specs is {} for train.
+    cache_dtype overrides the KV-cache element type (fp8 cache variant)."""
+    cache_dtype = cache_dtype or dtype
+    cfg = adapt_config(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": _token_spec(cfg, B, S),
+            "labels": _token_spec(cfg, B, S),
+            **_extras(cfg, B, S, dtype),
+        }
+        if cfg.mrope_sections:
+            batch["positions"] = _positions_spec(cfg, B, S)
+        return batch, {}
+
+    if shape.kind == "prefill":
+        batch = {
+            "tokens": _token_spec(cfg, B, S),
+            **_extras(cfg, B, S, dtype),
+        }
+        if cfg.mrope_sections:
+            batch["positions"] = _positions_spec(cfg, B, S)
+        cache = make_cache(cfg, B, S, cache_dtype, spec_only=True)
+        return batch, cache
+
+    # decode: ONE new token against a cache of seq_len (ring-capped by window)
+    extras = _extras(cfg, B, 1, dtype)
+    if cfg.cross_kv_cache:
+        extras.pop("cond_memory", None)  # served from the cached projections
+    batch = {
+        "tokens": _token_spec(cfg, B, 1),
+        "positions": _positions_spec(cfg, B, 1),
+        **extras,
+    }
+    cache = make_cache(cfg, B, S, cache_dtype, spec_only=True)
+    return batch, cache
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]

@@ -1,0 +1,10 @@
+from repro.models.config import (ArchConfig, InputShape, MLAConfig, MoEConfig,
+                                 SSMConfig, INPUT_SHAPES, TRAIN_4K,
+                                 PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.models.model import Model
+
+__all__ = [
+    "ArchConfig", "InputShape", "MLAConfig", "MoEConfig", "SSMConfig",
+    "Model", "INPUT_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K",
+]

@@ -1,0 +1,404 @@
+"""Attention variants: GQA (llama/qwen/yi/chatglm), MLA (DeepSeek-V2), sliding-window,
+cross-attention (musicgen), with unified train / prefill / decode entry points.
+
+The jnp reference path here is the semantics oracle; the Pallas kernels in
+``repro.kernels`` implement the same math for the TPU hot path (``use_kernel`` flag in
+ops wrappers selects them; on CPU the reference path runs).
+
+Cache layouts (see repro.models.cache):
+  * GQA:    k,v            (B, S_cache, n_kv, hd)        ring-buffered when windowed
+  * MLA:    c_kv           (B, S_cache, kv_lora)  + k_rope (B, S_cache, rope_hd)
+  * cross:  precomputed k,v over conditioning memory (immutable)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (Params, apply_rope, dense, dense_init,
+                                 dense_spec)
+
+NEG_INF = -1e30
+
+
+# =============================================================================
+# parameter specs / init
+# =============================================================================
+
+def attn_spec(cfg: ArchConfig, dtype) -> Params:
+    if cfg.mla is not None:
+        return _mla_spec(cfg, dtype)
+    hd = cfg.hd
+    return {
+        "wq": dense_spec(cfg.d_model, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_spec(cfg.d_model, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_spec(cfg.d_model, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_spec(cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def attn_init(key, cfg: ArchConfig, dtype) -> Params:
+    if cfg.mla is not None:
+        return _mla_init(key, cfg, dtype)
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def _mla_spec(cfg: ArchConfig, dtype) -> Params:
+    m = cfg.mla
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": dense_spec(cfg.d_model, cfg.n_heads * qd, dtype),
+        "w_dkv": dense_spec(cfg.d_model, m.kv_lora_rank, dtype),
+        "w_krope": dense_spec(cfg.d_model, m.qk_rope_head_dim, dtype),
+        "w_uk": dense_spec(m.kv_lora_rank, cfg.n_heads * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_spec(m.kv_lora_rank, cfg.n_heads * m.v_head_dim, dtype),
+        "wo": dense_spec(cfg.n_heads * m.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def _mla_init(key, cfg: ArchConfig, dtype) -> Params:
+    m = cfg.mla
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * qd, dtype),
+        "w_dkv": dense_init(ks[1], cfg.d_model, m.kv_lora_rank, dtype),
+        "w_krope": dense_init(ks[2], cfg.d_model, m.qk_rope_head_dim, dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, cfg.n_heads * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, cfg.n_heads * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], cfg.n_heads * m.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def cross_attn_spec(cfg: ArchConfig, dtype) -> Params:
+    hd = cfg.hd
+    return {
+        "wq": dense_spec(cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_spec(cfg.d_model, cfg.n_heads * hd, dtype),
+        "wv": dense_spec(cfg.d_model, cfg.n_heads * hd, dtype),
+        "wo": dense_spec(cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+cross_attn_init = attn_init  # same structure when n_kv == n_heads
+
+
+# =============================================================================
+# masking / core softmax attention
+# =============================================================================
+
+def causal_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                window: Optional[int]) -> jnp.ndarray:
+    """Boolean mask (..., Sq, Sk): True = attend. Supports sliding window."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    ok &= k_pos[..., None, :] >= 0  # left-padding uses negative positions
+    if window is not None:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return ok
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray], scale: float) -> jnp.ndarray:
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D'), GQA by head-group broadcast."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(v.dtype)
+
+
+# Above this many score elements per (batch, head), causal attention switches
+# to the q-blocked path: O(S * block) memory instead of O(S^2), GSPMD-safe
+# (pure jnp inside lax.map — XLA shards it like any other einsum chain).
+BLOCKED_THRESHOLD = 4_194_304  # 2048^2
+BLOCK_Q = 512
+
+
+def sdpa_causal_blocked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        positions: jnp.ndarray, window: Optional[int],
+                        scale: float, block_q: int = BLOCK_Q) -> jnp.ndarray:
+    """Causal attention without materializing (Sq, Sk) scores.
+
+    Iterates q blocks with lax.map (scan-lowered: XLA keeps one block's
+    scores live at a time, and remat recomputes them on the backward pass).
+    positions: (B, S) absolute positions shared by q and k.
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    pad = (-S) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions_q = jnp.pad(positions, ((0, 0), (0, pad)),
+                              constant_values=-(10 ** 9))
+    else:
+        positions_q = positions
+    nb = q.shape[1] // block_q
+    qb = q.reshape(B, nb, block_q, Hq, D)
+    pq = positions_q.reshape(B, nb, block_q)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_block(args):
+        qi, pqi = args                      # (B, bq, Hq, D), (B, bq)
+        qg = qi.reshape(B, block_q, Hkv, g, D).astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * scale
+        ok = positions[:, None, :] <= pqi[:, :, None]
+        ok &= positions[:, None, :] >= 0
+        if window is not None:
+            ok &= positions[:, None, :] > pqi[:, :, None] - window
+        s = jnp.where(ok[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+        return o.reshape(B, block_q, Hq, vf.shape[-1])
+
+    out = jax.lax.map(one_block, (jnp.moveaxis(qb, 1, 0),
+                                  jnp.moveaxis(pq, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nb * block_q, Hq, vf.shape[-1])
+    return out[:, :S].astype(v.dtype)
+
+
+# =============================================================================
+# GQA attention — train / prefill / decode
+# =============================================================================
+
+def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                positions: jnp.ndarray,
+                cache: Optional[Dict] = None,
+                use_kernel: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Unified GQA attention.
+
+    train/prefill: x (B,S,D), positions (B,S[,3]); cache None (train) or an empty
+      cache dict to fill (prefill).
+    decode: x (B,1,D); cache holds k/v + per-slot absolute positions; ring-buffer
+      writes when cfg.attn_window is set.
+    """
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+
+    if cfg.rope_variant not in ("none", "sinusoidal"):
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction,
+                       cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction,
+                       cfg.mrope_sections)
+
+    scale = 1.0 / np.sqrt(hd)
+    pos1d = positions[..., 0] if positions.ndim == 3 else positions
+
+    # Routing is static: S > 1 means train/prefill (fresh cache), S == 1 means a
+    # decode step against the ring cache. Chunked prefill (S > 1 with a non-empty
+    # cache) is intentionally unsupported — the engine always prefills whole
+    # prompts (see repro/serving/engine.py).
+    if cache is None or S > 1:
+        # ---- train / prefill over full (possibly windowed) sequence
+        if use_kernel:
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(q, k, v, causal=True,
+                                         window=cfg.attn_window, scale=scale)
+        elif S * S > BLOCKED_THRESHOLD:
+            out = sdpa_causal_blocked(q, k, v, pos1d, cfg.attn_window, scale)
+        else:
+            mask = causal_mask(pos1d, pos1d, cfg.attn_window)
+            out = sdpa(q, k, v, mask, scale)
+        new_cache = None
+        if cache is not None:
+            new_cache = _fill_cache(cfg, cache, k, v, pos1d)
+        y = dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+        return y, new_cache
+
+    # ---- decode: single (or few) new tokens against the cache
+    ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+    W = ck.shape[1]
+    slot = (pos1d % W).astype(jnp.int32)  # (B, S)
+    bidx = jnp.arange(B)[:, None]
+    ck = ck.at[bidx, slot].set(k)
+    cv = cv.at[bidx, slot].set(v)
+    cpos = cpos.at[bidx, slot].set(pos1d.astype(jnp.int32))
+
+    if use_kernel:
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention_cache(q, ck, cv, cpos, pos1d[:, 0],
+                                            scale=scale,
+                                            window=cfg.attn_window)
+    else:
+        # mask over cache slots by absolute position validity
+        ok = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= pos1d[:, :, None])
+        if cfg.attn_window is not None:
+            ok &= cpos[:, None, :] > pos1d[:, :, None] - cfg.attn_window
+        out = sdpa(q, ck, cv, ok, scale)
+    y = dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+def _fill_cache(cfg: ArchConfig, cache: Dict, k, v, pos1d) -> Dict:
+    """Write prefill keys/values into an allocated cache (ring for windowed).
+
+    When S > W only the last W tokens can survive, so slice before scattering —
+    this keeps scatter indices unique (``.at[].set`` with duplicates is undefined).
+    """
+    B, S = pos1d.shape
+    ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+    W = ck.shape[1]
+    if S > W:
+        k, v, pos1d = k[:, -W:], v[:, -W:], pos1d[:, -W:]
+    slot = (pos1d % W).astype(jnp.int32)
+    bidx = jnp.arange(B)[:, None]
+    ck = ck.at[bidx, slot].set(k.astype(ck.dtype))
+    cv = cv.at[bidx, slot].set(v.astype(cv.dtype))
+    cpos = cpos.at[bidx, slot].set(pos1d.astype(jnp.int32))
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+# =============================================================================
+# MLA attention (DeepSeek-V2): latent KV cache
+# =============================================================================
+
+def mla_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                positions: jnp.ndarray,
+                cache: Optional[Dict] = None,
+                absorbed_decode: bool = True,
+                use_kernel: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Multi-head Latent Attention.
+
+    The cache stores only the compressed latent ``c_kv`` (rank kv_lora) plus the
+    shared rope key — the paper-relevant decode-bytes optimization. In absorbed
+    decode mode, scores are computed in latent space (W_uk folded into q), so the
+    per-step bytes are O(S·(kv_lora + rope_hd)) instead of O(S·2·H·hd).
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = 1.0 / np.sqrt(nd + rd)
+    pos1d = positions[..., 0] if positions.ndim == 3 else positions
+
+    q = dense(p["wq"], x).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, pos1d, cfg.rope_theta)
+
+    c_kv = dense(p["w_dkv"], x)                       # (B,S,r)
+    k_rope = dense(p["w_krope"], x).reshape(B, S, 1, rd)
+    k_rope = apply_rope(k_rope, pos1d, cfg.rope_theta)
+
+    decoding = cache is not None and S == 1
+
+    if decoding:
+        cc, cr, cpos = cache["c_kv"], cache["k_rope"], cache["pos"]
+        W = cc.shape[1]
+        slot = (pos1d % W).astype(jnp.int32)
+        bidx = jnp.arange(B)[:, None]
+        cc = cc.at[bidx, slot].set(c_kv.astype(cc.dtype))
+        cr = cr.at[bidx, slot].set(k_rope[:, :, 0].astype(cr.dtype))
+        cpos = cpos.at[bidx, slot].set(pos1d.astype(jnp.int32))
+        ok = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= pos1d[:, :, None])
+        if cfg.attn_window is not None:
+            ok &= cpos[:, None, :] > pos1d[:, :, None] - cfg.attn_window
+
+        if absorbed_decode:
+            # fold W_uk into q: q_lat (B,S,H,r)
+            w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, H, nd)
+            q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                               w_uk.astype(jnp.float32))
+            scores = jnp.einsum("bshr,bkr->bhsk", q_lat,
+                                cc.astype(jnp.float32))
+            scores += jnp.einsum("bshr,bkr->bhsk", q_rope.astype(jnp.float32),
+                                 cr.astype(jnp.float32))
+            scores = jnp.where(ok[:, None], scores * scale, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            ctx_lat = jnp.einsum("bhsk,bkr->bshr", probs,
+                                 cc.astype(jnp.float32))       # (B,S,H,r)
+            w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, H, vd)
+            out = jnp.einsum("bshr,rhv->bshv", ctx_lat,
+                             w_uv.astype(jnp.float32)).astype(x.dtype)
+        else:
+            k_nope = dense(p["w_uk"], cc).reshape(B, -1, H, nd)
+            vv = dense(p["w_uv"], cc).reshape(B, -1, H, vd)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(cr[:, :, None],
+                                          (B, cc.shape[1], H, rd))], axis=-1)
+            q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+            out = sdpa(q_full, k_full, vv, ok, scale)
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": cpos}
+        y = dense(p["wo"], out.reshape(B, S, H * vd))
+        return y, new_cache
+
+    # ---- train / prefill: decompress (compute-bound, MXU-friendly)
+    k_nope = dense(p["w_uk"], c_kv).reshape(B, S, H, nd)
+    vv = dense(p["w_uv"], c_kv).reshape(B, S, H, vd)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if use_kernel:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q_full, k_full, vv, causal=True,
+                                     window=cfg.attn_window, scale=scale)
+    elif S * S > BLOCKED_THRESHOLD:
+        out = sdpa_causal_blocked(q_full, k_full, vv, pos1d,
+                                  cfg.attn_window, scale)
+    else:
+        mask = causal_mask(pos1d, pos1d, cfg.attn_window)
+        out = sdpa(q_full, k_full, vv, mask, scale)
+    new_cache = None
+    if cache is not None:
+        cc, cr, cpos = cache["c_kv"], cache["k_rope"], cache["pos"]
+        W = cc.shape[1]
+        c_w, kr_w, pos_w = c_kv, k_rope[:, :, 0], pos1d
+        if S > W:
+            c_w, kr_w, pos_w = c_w[:, -W:], kr_w[:, -W:], pos_w[:, -W:]
+        slot = (pos_w % W).astype(jnp.int32)
+        bidx = jnp.arange(B)[:, None]
+        cc = cc.at[bidx, slot].set(c_w.astype(cc.dtype))
+        cr = cr.at[bidx, slot].set(kr_w.astype(cr.dtype))
+        cpos = cpos.at[bidx, slot].set(pos_w.astype(jnp.int32))
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": cpos}
+    y = dense(p["wo"], out.reshape(B, S, H * vd))
+    return y, new_cache
+
+
+# =============================================================================
+# Cross-attention (musicgen conditioning) — memory is static, cache-free
+# =============================================================================
+
+def cross_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                  memory: Optional[jnp.ndarray],
+                  cached_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+                  ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Cross-attention over the static conditioning memory.
+
+    When ``cached_kv`` is provided (decode with cfg.cross_kv_cache), the
+    memory projections are skipped entirely — the conditioning sequence never
+    changes across decode steps, so re-projecting it every token is pure
+    waste (§Perf beyond-paper; measured on musicgen decode_32k).
+    """
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    if cached_kv is not None:
+        k, v = cached_kv
+    else:
+        Tm = memory.shape[1]
+        k = dense(p["wk"], memory).reshape(B, Tm, cfg.n_heads, hd)
+        v = dense(p["wv"], memory).reshape(B, Tm, cfg.n_heads, hd)
+    out = sdpa(q, k, v, None, 1.0 / np.sqrt(hd))
+    return dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd)), (k, v)

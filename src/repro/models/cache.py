@@ -1,0 +1,121 @@
+"""KV / state cache construction.
+
+Cache kinds per sub-layer:
+  * GQA attention:  k, v  (B, W, n_kv, hd) + per-slot absolute positions (B, W)
+  * MLA attention:  c_kv (B, W, kv_lora) + k_rope (B, W, rope_hd) + pos (B, W)
+  * Mamba-2 (SSM):  ssm state (B, H, P, N) f32 + conv tail (B, d_conv-1, Ch)
+
+W = min(cache_len, cfg.attn_window or cache_len): a windowed arch never allocates
+more than `window` slots — this is what makes long_500k decode sub-quadratic for
+the sliding-window variants (DESIGN.md §4).
+
+``spec_only=True`` mirrors the allocation with ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+def n_prefix_layers(cfg: ArchConfig) -> int:
+    """Leading non-uniform layers excluded from the scan (e.g. deepseek's first
+    dense layer before the MoE stack)."""
+    if cfg.moe is not None and cfg.moe.first_dense:
+        return cfg.moe.first_dense
+    return 0
+
+
+def n_scanned_super_blocks(cfg: ArchConfig) -> int:
+    period = len(cfg.pattern)
+    rest = cfg.n_layers - n_prefix_layers(cfg)
+    assert rest % period == 0, (cfg.name, rest, period)
+    return rest // period
+
+
+def _attn_entry(cfg: ArchConfig, batch: int, cache_len: int, dtype, spec_only: bool):
+    W = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    if cfg.mla is not None:
+        m = cfg.mla
+        shapes = {
+            "c_kv": ((batch, W, m.kv_lora_rank), dtype),
+            "k_rope": ((batch, W, m.qk_rope_head_dim), dtype),
+            "pos": ((batch, W), jnp.int32),
+        }
+    else:
+        shapes = {
+            "k": ((batch, W, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": ((batch, W, cfg.n_kv_heads, cfg.hd), dtype),
+            "pos": ((batch, W), jnp.int32),
+        }
+    if cfg.cross_attention and cfg.cross_kv_cache:
+        shapes["xk"] = ((batch, cfg.n_cond_tokens, cfg.n_heads, cfg.hd), dtype)
+        shapes["xv"] = ((batch, cfg.n_cond_tokens, cfg.n_heads, cfg.hd), dtype)
+    if spec_only:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    out = {}
+    for k, (s, d) in shapes.items():
+        out[k] = jnp.full(s, -1, d) if k == "pos" else jnp.zeros(s, d)
+    return out
+
+
+def _ssm_entry(cfg: ArchConfig, batch: int, dtype, spec_only: bool):
+    s = cfg.ssm
+    conv_ch = cfg.d_inner + 2 * s.n_groups * s.d_state
+    shapes = {
+        "ssm": ((batch, cfg.ssm_heads, s.headdim, s.d_state), jnp.float32),
+        "conv": ((batch, s.d_conv - 1, conv_ch), dtype),
+    }
+    if spec_only:
+        return {k: jax.ShapeDtypeStruct(sh, d) for k, (sh, d) in shapes.items()}
+    return {k: jnp.zeros(sh, d) for k, (sh, d) in shapes.items()}
+
+
+def _entry(cfg: ArchConfig, mixer: str, batch: int, cache_len: int, dtype,
+           spec_only: bool):
+    if mixer == "a":
+        return _attn_entry(cfg, batch, cache_len, dtype, spec_only)
+    return _ssm_entry(cfg, batch, dtype, spec_only)
+
+
+def _super_block_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype,
+                       spec_only: bool) -> Dict:
+    return {f"l{i}": _entry(cfg, mixer, batch, cache_len, dtype, spec_only)
+            for i, mixer in enumerate(cfg.pattern)}
+
+
+def _stack(tree, n: int, spec_only: bool):
+    if spec_only:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), tree)
+
+
+def make_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
+               spec_only: bool = False) -> Dict:
+    """Full-model cache: {"prefix": [...], "blocks": (n_scanned, ...) stacked}."""
+    period = len(cfg.pattern)
+    prefix = [
+        _entry(cfg, cfg.pattern[i % period], batch, cache_len, dtype, spec_only)
+        for i in range(n_prefix_layers(cfg))
+    ]
+    blocks = _stack(_super_block_cache(cfg, batch, cache_len, dtype, spec_only),
+                    n_scanned_super_blocks(cfg), spec_only)
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, cache_len: int,
+                bytes_per_el: int = 2) -> int:
+    """Analytic cache size (used by the orchestrator's memory constraint)."""
+    specs = make_cache(cfg, batch, cache_len, spec_only=True)
+    total = 0
+    for leaf in jax.tree.leaves(specs):
+        el = 4 if leaf.dtype in (jnp.int32, jnp.float32) else bytes_per_el
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n * el
+    return total

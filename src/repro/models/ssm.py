@@ -1,0 +1,274 @@
+"""Mamba-2 (State Space Duality) block.
+
+TPU adaptation note (DESIGN.md §2): the SSD formulation is chosen *because* it casts
+the selective-scan as chunked matmuls — MXU-friendly — instead of the GPU-style
+hardware-aware parallel scan of Mamba-1. Intra-chunk work is dense einsums (the Pallas
+``ssd_scan`` kernel tiles these into VMEM); the inter-chunk state carry is a
+``jax.lax.scan`` with O(1) state.
+
+Prefill/train path: chunked SSD. Decode path: exact O(1) recurrence
+    state <- state * exp(dt*A) + dt * (B outer x);   y = <C, state> + D*x
+which is the memory-bound stage the paper's orchestrator routes to bandwidth-optimal
+devices (Formalism 5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import Params, dense, dense_init, dense_spec
+
+
+# --------------------------------------------------------------------------- params
+
+def ssm_spec(cfg: ArchConfig, dtype) -> Params:
+    s = cfg.ssm
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    if cfg.ssm_split_proj:
+        proj = {
+            "in_proj_z": dense_spec(cfg.d_model, d_in, dtype),
+            "in_proj_x": dense_spec(cfg.d_model, d_in, dtype),
+            "in_proj_bc": dense_spec(cfg.d_model, 2 * s.n_groups * s.d_state,
+                                     dtype),
+            "in_proj_dt": dense_spec(cfg.d_model, H, dtype),
+        }
+    else:
+        proj = {"in_proj": dense_spec(
+            cfg.d_model, 2 * d_in + 2 * s.n_groups * s.d_state + H, dtype)}
+    return {
+        **proj,
+        "conv_w": jax.ShapeDtypeStruct((s.d_conv, conv_ch), dtype),
+        "conv_b": jax.ShapeDtypeStruct((conv_ch,), dtype),
+        "A_log": jax.ShapeDtypeStruct((H,), jnp.float32),
+        "dt_bias": jax.ShapeDtypeStruct((H,), jnp.float32),
+        "D": jax.ShapeDtypeStruct((H,), jnp.float32),
+        "norm_scale": jax.ShapeDtypeStruct((d_in,), dtype),
+        "out_proj": dense_spec(d_in, cfg.d_model, dtype),
+    }
+
+
+def ssm_init(key, cfg: ArchConfig, dtype) -> Params:
+    s = cfg.ssm
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,)) *
+                 (np.log(s.dt_max) - np.log(s.dt_min)) + np.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    if cfg.ssm_split_proj:
+        proj = {
+            "in_proj_z": dense_init(ks[0], cfg.d_model, d_in, dtype),
+            "in_proj_x": dense_init(ks[4], cfg.d_model, d_in, dtype),
+            "in_proj_bc": dense_init(ks[5], cfg.d_model,
+                                     2 * s.n_groups * s.d_state, dtype),
+            "in_proj_dt": dense_init(ks[6], cfg.d_model, H, dtype),
+        }
+    else:
+        proj = {"in_proj": dense_init(
+            ks[0], cfg.d_model, 2 * d_in + 2 * s.n_groups * s.d_state + H,
+            dtype)}
+    return {
+        **proj,
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   / np.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[3], d_in, cfg.d_model, dtype),
+    }
+
+
+# --------------------------------------------------------------------------- SSD core
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., T) -> (..., T, T) where out[..., i, j] = sum_{j < k <= i} x[..., k].
+
+    Lower-triangular cumulative segment sums (Mamba-2 paper's ``segsum``);
+    out is -inf above the diagonal.
+    """
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x  (B, L, H, P)    inputs per head
+    dt (B, L, H)       positive step sizes (softplus applied by caller)
+    A  (H,)            negative decay rates
+    Bm (B, L, H, N)    input  projections (group-broadcast done by caller)
+    Cm (B, L, H, N)    output projections
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, Bm, Cm = z(x), z(dt), z(Bm), z(Cm)
+    Lp = x.shape[1]
+    nc = Lp // chunk
+
+    def to_chunks(a):
+        return a.reshape((B, nc, chunk) + a.shape[2:])
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, Bm, Cm))
+    dA = dtc * A[None, None, None, :]                     # (B,nc,Q,H)
+    dA_cs = jnp.cumsum(dA, axis=2)                        # (B,nc,Q,H)
+
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        Y_diag, chunk_states = ssd_ops.ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc)
+    else:
+        # intra-chunk (dual / quadratic form): decay matrix per chunk
+        Lmat = jnp.exp(segsum(jnp.moveaxis(dA, 3, 2)))    # (B,nc,H,Q,Q)
+        scores = jnp.einsum("bcqhn,bcshn->bchqs",
+                            Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+        scores = scores * Lmat * jnp.moveaxis(dtc, 3, 2)[..., None, :]
+        Y_diag = jnp.einsum("bchqs,bcshp->bcqhp", scores, xc.astype(jnp.float32))
+        # states contributed by each chunk
+        decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (B,nc,Q,H)
+        chunk_states = jnp.einsum(
+            "bcqhn,bcqh,bcqhp->bchpn", Bc.astype(jnp.float32),
+            (decay * dtc).astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence (sequential over chunks, O(1) state)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (B,nc,H)
+
+    def step(state, inp):
+        st_c, dec_c = inp                                  # (B,H,P,N), (B,H)
+        out_prev = state                                   # state before this chunk
+        new = state * dec_c[:, :, None, None] + st_c
+        return new, out_prev
+
+    final_state, prev_states = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,P,N)
+
+    # contribution of the inherited state within each chunk
+    instate_decay = jnp.exp(dA_cs)                         # (B,nc,Q,H)
+    Y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cc.astype(jnp.float32), prev_states, instate_decay)
+
+    y = (Y_diag + Y_off).reshape(B, Lp, H, P)[:, :L]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, state):
+    """Exact single-token recurrence.
+
+    x (B,1,H,P), dt (B,1,H), Bm/Cm (B,1,H,N), state (B,H,P,N).
+    """
+    dA = jnp.exp(dt[..., 0, :] * A[None])                  # (B,H)
+    dBx = jnp.einsum("bhn,bh,bhp->bhpn", Bm[:, 0].astype(jnp.float32),
+                     dt[:, 0].astype(jnp.float32), x[:, 0].astype(jnp.float32))
+    new_state = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------- block
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray]):
+    """Depthwise causal conv1d. xBC (B,S,Ch), w (K,Ch). Returns (y, new_state)."""
+    K = w.shape[0]
+    B, S, Ch = xBC.shape
+    if conv_state is None:
+        ctx = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    # y[t] = sum_k w[k] * ctx[t + k]
+    y = sum(ctx[:, k:k + S] * w[k][None, None] for k in range(K)) + b
+    new_state = ctx[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, Ch), xBC.dtype)
+    return y, new_state
+
+
+def ssm_forward(p: Params, cfg: ArchConfig, u: jnp.ndarray,
+                cache: Optional[Dict] = None,
+                use_kernel: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    cache (decode / carry-through): {"ssm": (B,H,P,N) f32, "conv": (B,K-1,Ch)}.
+    """
+    s = cfg.ssm
+    B, S, _ = u.shape
+    d_in, H, N, G = cfg.d_inner, cfg.ssm_heads, s.d_state, s.n_groups
+    P = s.headdim
+
+    if cfg.ssm_split_proj:
+        z = dense(p["in_proj_z"], u)
+        xBC = jnp.concatenate([dense(p["in_proj_x"], u),
+                               dense(p["in_proj_bc"], u)], axis=-1)
+        dt_raw = dense(p["in_proj_dt"], u)
+    else:
+        zxbcdt = dense(p["in_proj"], u)
+        z = zxbcdt[..., :d_in]
+        xBC = zxbcdt[..., d_in:d_in + d_in + 2 * G * N]
+        dt_raw = zxbcdt[..., -H:]
+
+    conv_state = cache.get("conv") if cache else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+
+    x = xBC[..., :d_in].reshape(B, S, H, P)
+    Bm = xBC[..., d_in:d_in + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_in + G * N:].reshape(B, S, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+
+    # §Perf pair-1 hint: GSPMD cannot propagate head sharding through the
+    # non-aligned slices above and replicates the SSD scan across "model";
+    # pin the head dim explicitly (no-op unless hints.enable()d).
+    from repro.distributed import hints
+    if hints.enabled():
+        x = hints.constrain(x, (None, None, "tensor", None), divisible_dim=2)
+        Bm = hints.constrain(Bm, (None, None, "tensor", None), divisible_dim=2)
+        Cm = hints.constrain(Cm, (None, None, "tensor", None), divisible_dim=2)
+        dt_raw = hints.constrain(dt_raw, (None, None, "tensor"),
+                                 divisible_dim=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    init_state = cache.get("ssm") if cache else None
+    if S == 1 and init_state is not None:
+        y, new_state = ssd_decode_step(x, dt, A, Bm, Cm, init_state)
+    else:
+        y, new_state = ssd_chunked(x, dt, A, Bm, Cm, s.chunk,
+                                   init_state, use_kernel=use_kernel)
+
+    y = y + x * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+
+    # gated RMSNorm (mamba2)
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"].astype(jnp.float32)
+    out = dense(p["out_proj"], g.astype(u.dtype))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": new_state, "conv": new_conv}
+    return out, new_cache

@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationResult, ServingEngine
+
+__all__ = ["ServingEngine", "GenerationResult"]

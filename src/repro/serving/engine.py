@@ -1,0 +1,143 @@
+"""Serving engine: batched prefill + autoregressive decode with KV caches.
+
+This is the substrate under the paper's repeated-sampling experiments: the engine
+prefills a batch of prompts once, then runs jitted single-token decode steps. The
+QEIL orchestrator (repro.core.orchestrator) decides *where* prefill and decode run
+(device profiles / mesh slices); the engine is the *how*.
+
+Requests inside one ``generate`` call are grouped by prompt length (static-shape
+jit); repeated sampling tiles each prompt ``n_samples`` times so all samples of a
+request decode in one batch — the batched-inference pattern the paper assumes when
+it amortizes prefill energy across samples.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class GenerationResult:
+    prompt: np.ndarray
+    samples: List[np.ndarray]          # n_samples completions (token arrays)
+    logprobs: List[float]              # mean per-token logprob per sample
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, max_new_tokens: int = 32,
+                 temperature: float = 0.8, eos_token: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self.eos_token = eos_token
+        self._prefill_jit = jax.jit(self._prefill)
+        self._decode_jit = jax.jit(self._decode_step)
+
+    # ------------------------------------------------------------------ jitted
+    def _prefill(self, params, tokens, cache, extras):
+        batch = {"tokens": tokens, **extras}
+        logits, cache, _ = self.model.forward(params, batch, cache)
+        return logits[:, -1], cache
+
+    def _decode_step(self, params, tok, pos, cache, rng, temperature, extras):
+        b = {"tokens": tok, "positions": pos, **extras}
+        logits, cache, _ = self.model.forward(params, b, cache)
+        logits = logits[:, 0].astype(jnp.float32)          # (B, V) or (B, K, V)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        sample = jax.random.categorical(rng, logits / temperature, axis=-1)
+        chosen_logp = jnp.take_along_axis(logp, sample[..., None],
+                                          axis=-1)[..., 0]
+        return sample, chosen_logp, cache
+
+    # ------------------------------------------------------------------ public
+    def generate(self, prompts: Sequence[np.ndarray], n_samples: int = 1,
+                 max_new_tokens: Optional[int] = None,
+                 temperature: Optional[float] = None,
+                 rng: Optional[jax.Array] = None,
+                 extras: Optional[Dict] = None) -> List[GenerationResult]:
+        """Generate ``n_samples`` completions per prompt."""
+        max_new = max_new_tokens or self.max_new_tokens
+        temp = temperature if temperature is not None else self.temperature
+        rng = rng if rng is not None else jax.random.key(0)
+        extras = extras or {}
+
+        results: List[Optional[GenerationResult]] = [None] * len(prompts)
+        by_len: Dict[int, List[int]] = {}
+        for i, p in enumerate(prompts):
+            by_len.setdefault(len(p), []).append(i)
+
+        for plen, idxs in by_len.items():
+            rng, sub = jax.random.split(rng)
+            group = [prompts[i] for i in idxs]
+            group_res = self._generate_equal_len(group, n_samples, max_new,
+                                                 temp, sub, extras)
+            for i, r in zip(idxs, group_res):
+                results[i] = r
+        return results  # type: ignore[return-value]
+
+    def _generate_equal_len(self, prompts, n_samples, max_new, temp, rng,
+                            extras) -> List[GenerationResult]:
+        mc = self.model.cfg.n_codebooks > 1
+        plen = len(prompts[0])
+        base = np.stack(prompts)                            # (R, L[,K])
+        tokens = np.repeat(base, n_samples, axis=0)         # (R*S, L[,K])
+        B = tokens.shape[0]
+        tiled_extras = {k: jnp.repeat(jnp.asarray(v), n_samples, axis=0)
+                        for k, v in extras.items()}
+
+        cache = self.model.init_cache(B, plen + max_new)
+        last_logits, cache = self._prefill_jit(
+            self.params, jnp.asarray(tokens), cache, tiled_extras)
+
+        # first sampled token comes from the prefill logits
+        rng, sub = jax.random.split(rng)
+        lf = last_logits.astype(jnp.float32)
+        logp0 = jax.nn.log_softmax(lf, axis=-1)
+        tok = jax.random.categorical(sub, lf / temp, axis=-1)
+        lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
+
+        out_toks = [np.asarray(tok)]
+        out_lps = [np.asarray(lp if not mc else lp.mean(-1))]
+        for t in range(1, max_new):
+            rng, sub = jax.random.split(rng)
+            pos = jnp.full((B, 1), plen + t - 1, jnp.int32)
+            if self.model.cfg.mrope_sections:
+                pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+            tok_in = tok[:, None] if not mc else tok[:, None, :]
+            tok, lp, cache = self._decode_jit(self.params, tok_in, pos, cache,
+                                              sub, temp, tiled_extras)
+            out_toks.append(np.asarray(tok))
+            out_lps.append(np.asarray(lp if not mc else lp.mean(-1)))
+
+        toks = np.stack(out_toks, axis=1)                   # (B, T[,K])
+        lps = np.stack(out_lps, axis=1)                     # (B, T)
+
+        results = []
+        for r in range(len(prompts)):
+            sl = slice(r * n_samples, (r + 1) * n_samples)
+            samples = [toks[i] for i in range(sl.start, sl.stop)]
+            if self.eos_token is not None and not mc:
+                samples = [self._truncate(s) for s in samples]
+            results.append(GenerationResult(
+                prompt=prompts[r],
+                samples=samples,
+                logprobs=[float(lps[i].mean())
+                          for i in range(sl.start, sl.stop)],
+                prefill_tokens=plen,
+                decode_tokens=int(np.prod(toks.shape[1:2])) * n_samples,
+            ))
+        return results
+
+    def _truncate(self, sample: np.ndarray) -> np.ndarray:
+        hits = np.nonzero(sample == self.eos_token)[0]
+        return sample[: hits[0]] if hits.size else sample

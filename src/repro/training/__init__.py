@@ -1,0 +1,10 @@
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state, lr_schedule,
+                                      opt_state_specs)
+from repro.training.loop import make_train_step, train
+from repro.training.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                       save_checkpoint)
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_schedule",
+           "opt_state_specs", "make_train_step", "train", "save_checkpoint",
+           "restore_checkpoint", "latest_checkpoint"]

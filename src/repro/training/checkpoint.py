@@ -1,0 +1,82 @@
+"""Checkpointing: msgpack-serialized pytrees with shape/dtype manifest.
+
+No orbax in this environment; this implements the standard pattern — flatten the
+pytree to (path, array) pairs, save raw bytes + a manifest, restore with validation.
+Atomic via write-to-tmp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, step: int, params: Any,
+                    opt_state: Any = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    payload = {"params": _flatten(params)}
+    if opt_state is not None:
+        payload["opt_state"] = _flatten(opt_state)
+    manifest = {
+        "step": step,
+        "arrays": {
+            f"{group}:{k}": {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for group, arrs in payload.items() for k, v in arrs.items()
+        },
+    }
+    tmp = tempfile.mkdtemp(dir=path)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"{g}:{k}": v for g, arrs in payload.items()
+                for k, v in arrs.items()})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(path, f"step_{step:08d}")
+    if os.path.exists(final):
+        raise FileExistsError(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_checkpoint(path: str) -> str | None:
+    if not os.path.isdir(path):
+        return None
+    steps = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    return os.path.join(path, steps[-1]) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, params_template: Any,
+                       opt_template: Any = None
+                       ) -> Tuple[int, Any, Any]:
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+
+    def rebuild(template: Any, group: str) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = arrays[f"{group}:{key}"]
+            want = tuple(leaf.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(f"{key}: checkpoint {arr.shape} != model {want}")
+            leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = rebuild(params_template, "params")
+    opt_state = rebuild(opt_template, "opt_state") if opt_template is not None else None
+    return manifest["step"], params, opt_state

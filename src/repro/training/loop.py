@@ -1,0 +1,87 @@
+"""Training loop: jitted train_step factory, metrics, host loop.
+
+``make_train_step`` is the function the multi-pod dry-run lowers for the
+``train_4k`` shape: (params, opt_state, batch) -> (params, opt_state, metrics).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_loss_fn(model: Model) -> Callable:
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    """microbatches > 1: gradient accumulation via lax.scan — the global batch
+    splits into `microbatches` slices processed sequentially, dividing peak
+    activation memory by the same factor at the cost of `microbatches` weight
+    passes (§Perf pair 2's memory-term optimization)."""
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches) +
+                                 x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                loss_sum, g_sum = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    g_sum, grads)
+                return (loss_sum + loss / microbatches, g_sum), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zero_grads), micro)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, opt_cfg: AdamWConfig, data_iter, n_steps: int,
+          params=None, rng=None, log_every: int = 10,
+          checkpoint_fn: Optional[Callable] = None,
+          checkpoint_every: int = 0) -> Tuple[Any, Dict]:
+    """Single-host training loop (the examples / smoke tests use this; the
+    multi-pod launcher in repro.launch.train shards the same train_step)."""
+    if params is None:
+        params = model.init(rng if rng is not None else jax.random.key(0))
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(n_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+        if checkpoint_fn and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            checkpoint_fn(step + 1, params, opt_state)
+    return params, {"history": history,
+                    "final_loss": history[-1]["loss"] if history else None}

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and benches
+# must see the single real CPU device. Only launch/dryrun.py forces 512
+# placeholder devices (in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,130 @@
+"""Unit + property tests for the five scaling formalisms and the fitting code."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CoverageParams, coverage, cost_total, energy_total,
+                        fit_coverage_joint, fit_power_law, latency,
+                        samples_for_coverage, empirical_coverage,
+                        simulate_outcomes)
+from repro.core.devices import EDGE_CPU, EDGE_GPU_NVIDIA, EDGE_NPU
+from repro.core.formalisms import device_task_match, quant_factor
+
+
+# --------------------------------------------------------------- Formalism 1
+@given(S=st.floats(1, 1e4), N=st.floats(1, 1e5), T=st.floats(1, 1e5))
+@settings(max_examples=200, deadline=None)
+def test_coverage_bounds(S, N, T):
+    c = coverage(S, N, T)
+    assert 0.0 <= c <= 1.0
+
+
+@given(S=st.floats(1, 1e3), N=st.floats(10, 1e4), T=st.floats(8, 2048),
+       dS=st.floats(1.01, 10))
+@settings(max_examples=200, deadline=None)
+def test_coverage_monotone_in_samples(S, N, T, dS):
+    assert coverage(S * dS, N, T) >= coverage(S, N, T) - 1e-12
+
+
+def test_coverage_inverse_roundtrip():
+    p = CoverageParams.calibrated(124.0)
+    for target in (0.3, 0.5, 0.7, 0.9):
+        S = samples_for_coverage(target, 124.0, 256.0, p)
+        assert math.isclose(coverage(S, 124.0, 256.0, p), target,
+                            rel_tol=1e-9)
+
+
+def test_calibrated_hits_paper_table16():
+    """C(20, N, 256) == 0.70 after per-model calibration, all five models."""
+    for n_m in (124, 350, 500, 1236, 2600):
+        p = CoverageParams.calibrated(float(n_m), target_cov=0.70)
+        assert math.isclose(coverage(20, n_m, 256, p), 0.70, rel_tol=1e-9)
+
+
+# --------------------------------------------------------------- fitting
+def test_fit_recovers_exponent_exactly():
+    p = CoverageParams.calibrated(124.0)
+    S = [1, 2, 5, 10, 15, 20]
+    C = [coverage(s, 124.0, 256.0, p) for s in S]
+    fit = fit_power_law(S, C)
+    assert abs(fit.beta - 0.7) < 1e-6
+    assert fit.r2 > 0.9999
+
+
+def test_joint_fit_recovers_both_exponents():
+    p = CoverageParams(alpha=2e-4, beta_N=0.65, beta_S=0.75)
+    N, S, C = [], [], []
+    for n in (125, 350, 500, 1200, 2600):
+        for s in (1, 2, 5, 10, 20):
+            N.append(n); S.append(s)
+            C.append(coverage(s, n, 256.0, p))
+    fit = fit_coverage_joint(N, S, C)
+    assert abs(fit.beta_N - 0.65) < 1e-6
+    assert abs(fit.beta_S - 0.75) < 1e-6
+
+
+def test_simulated_outcomes_have_paper_beta():
+    out = simulate_outcomes(n_tasks=2000, n_samples=50, target_cov=0.70,
+                            seed=3)
+    ks = [1, 2, 5, 10, 15, 20]
+    cov = empirical_coverage(out, ks)
+    fit = fit_power_law(ks, [cov[k] for k in ks], n_bootstrap=200)
+    assert 0.60 <= fit.beta <= 0.82, fit.beta        # paper band is [0.64,0.76]
+    assert abs(cov[20] - 0.70) < 0.06
+
+
+def test_empirical_coverage_unbiased_estimator():
+    # all successes -> pass@k = 1; none -> 0
+    assert empirical_coverage(np.ones((5, 10), bool), [1, 5])[5] == 1.0
+    assert empirical_coverage(np.zeros((5, 10), bool), [1, 5])[5] == 0.0
+    # exactly one success out of 10 samples: pass@1 = 1/10
+    out = np.zeros((1000, 10), bool)
+    out[:, 0] = True
+    cov = empirical_coverage(out, [1])
+    assert math.isclose(cov[1], 0.1, rel_tol=1e-9)
+
+
+# --------------------------------------------------------------- Formalisms 2-5
+def test_energy_scaling_shape():
+    e1 = energy_total(10, 125, 256, "fp16", EDGE_GPU_NVIDIA)
+    e2 = energy_total(20, 125, 256, "fp16", EDGE_GPU_NVIDIA)
+    assert math.isclose(e2 / e1, 2.0, rel_tol=1e-9)     # linear in S
+    eN = energy_total(10, 250, 256, "fp16", EDGE_GPU_NVIDIA)
+    assert math.isclose(eN / e1, 2 ** 0.9, rel_tol=1e-9)  # sublinear in N
+    ef8 = energy_total(10, 125, 256, "fp8", EDGE_GPU_NVIDIA)
+    assert math.isclose(ef8 / e1, 0.65, rel_tol=1e-9)
+
+
+def test_latency_decomposition():
+    lb = latency(S=20, T=256, N=125e6, device=EDGE_GPU_NVIDIA,
+                 heterogeneous=True)
+    assert lb.prefill_s > 0 and lb.decode_s > 0 and lb.overhead_s > 0
+    assert lb.total_s == pytest.approx(
+        lb.prefill_s + lb.decode_s + lb.io_s + lb.overhead_s)
+    # decode dominated by bandwidth disadvantage on CPU
+    lb_cpu = latency(S=20, T=256, N=125e6, device=EDGE_CPU)
+    assert lb_cpu.decode_s > lb.decode_s
+
+
+def test_cost_components_positive():
+    c = cost_total(20, 1000.0, EDGE_GPU_NVIDIA)
+    assert c["total"] == pytest.approx(
+        c["amortization"] + c["energy"] + c["maintenance"])
+    assert all(v >= 0 for v in c.values())
+
+
+def test_device_task_match_roofline():
+    # decode-like intensity ~1 is memory-bound everywhere
+    assert device_task_match(1.0, EDGE_GPU_NVIDIA) == "memory-bound"
+    # prefill-like intensity is compute-bound on the GPU (ridge ~133)
+    assert device_task_match(1000.0, EDGE_GPU_NVIDIA) == "compute-bound"
+    # NPU ridge = 13e12/50e9 = 260
+    assert device_task_match(200.0, EDGE_NPU) == "memory-bound"
+
+
+def test_quant_factor_table():
+    assert quant_factor("fp16") == 1.0
+    assert quant_factor("fp8") == 0.65

@@ -1,0 +1,107 @@
+"""Metrics, Pareto utilities, and the HLO collective parser."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (RunMetrics, arithmetic_intensity,
+                        collective_bytes_from_hlo, dominates, hypervolume_2d,
+                        improvement, pareto_front, terms_from_counts)
+from repro.core.devices import TPU_V5E
+
+
+def _m(cov, e, lat, p):
+    return RunMetrics(coverage=cov, accuracy=cov / 2, energy_j=e,
+                      latency_s=lat, power_w=p, throughput_tps=1000,
+                      cost_usd_per_1k=1.0)
+
+
+def test_metrics_definitions():
+    m = _m(0.7, 1000.0, 0.5, 100.0)
+    assert m.ipw == pytest.approx(0.007)
+    assert m.ece == pytest.approx(0.0007)
+    assert m.ppp > 0
+
+
+def test_improvement_signs():
+    base = _m(0.6, 1000, 1.0, 100)
+    new = _m(0.7, 500, 0.8, 50)
+    d = improvement(base, new)
+    assert d["coverage_pp"] == pytest.approx(10.0)
+    assert d["energy_pct"] == pytest.approx(-50.0)
+    assert d["ipw_pct"] > 0
+
+
+# ------------------------------------------------------------------ pareto
+def test_pareto_front_basic():
+    pts = [(1, 5), (2, 2), (5, 1), (3, 3), (6, 6)]
+    front = pareto_front(pts)
+    assert sorted(front) == [0, 1, 2]
+
+
+@given(st.lists(st.tuples(st.floats(0, 100), st.floats(0, 100)),
+                min_size=1, max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_pareto_front_property(pts):
+    front = pareto_front(pts)
+    assert front, "front never empty"
+    for i in front:
+        assert not any(dominates(pts[j], pts[i])
+                       for j in range(len(pts)) if j != i)
+
+
+def test_hypervolume_monotone():
+    ref = (10.0, 10.0)
+    hv1 = hypervolume_2d([(5, 5)], ref)
+    hv2 = hypervolume_2d([(5, 5), (2, 8)], ref)
+    hv3 = hypervolume_2d([(1, 1)], ref)
+    assert hv2 >= hv1
+    assert hv3 >= hv2
+    assert hv1 == pytest.approx(25.0)
+
+
+# ------------------------------------------------------------------ roofline
+def test_terms_and_dominance():
+    t = terms_from_counts(flops=197e12 * 256, bytes_moved=819e9 * 256,
+                          collective_bytes=50e9 * 256 * 10, n_chips=256,
+                          device=TPU_V5E)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(10.0)
+    assert t.dominant == "collective"
+    assert t.bound_time_s == pytest.approx(10.0)
+
+
+def test_arithmetic_intensity():
+    assert arithmetic_intensity(100.0, 50.0) == 2.0
+
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p = f32[128,256] parameter(0)
+  %ag = f32[2048,256] all-gather(%p), dimensions={0}
+  %ar = bf16[64,64] all-reduce(%x), to_apply=%add
+  %rs = f32[16,256] reduce-scatter(%ag), dimensions={0}
+  ROOT %a2a = (f32[8,8], f32[8,8]) all-to-all(%y, %z)
+  %cp = u8[1024] collective-permute(%w)
+}
+"""
+
+
+def test_collective_parser_counts_bytes():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-gather"] == 2048 * 256 * 4
+    assert out["all-reduce"] == 64 * 64 * 2
+    assert out["reduce-scatter"] == 16 * 256 * 4
+    assert out["all-to-all"] == 2 * 8 * 8 * 4
+    assert out["collective-permute"] == 1024
+    assert out["n_ops"] == 5
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_collective_parser_ignores_noncollectives():
+    hlo = "%d = f32[4096,4096] dot(%a, %b)\n%c = f32[4,4] add(%x, %y)"
+    assert collective_bytes_from_hlo(hlo)["total"] == 0

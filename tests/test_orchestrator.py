@@ -1,0 +1,105 @@
+"""Greedy orchestration, oracle optimality gap, Pareto frontier, safety hooks."""
+import numpy as np
+import pytest
+
+from repro.core import (Constraints, GreedyOrchestrator, ParetoOrchestrator,
+                        Workload, decompose, exhaustive_oracle,
+                        homogeneous_assignment, pareto_front, plan_costs)
+from repro.core.devices import (EDGE_CPU, EDGE_GPU_NVIDIA, EDGE_NPU,
+                                EDGE_PLATFORM)
+from repro.configs.paper_models import GPT2_125M
+from repro.models import ArchConfig
+
+W = Workload(batch=1, prompt_tokens=128, decode_tokens=256, samples=20)
+
+TINY = ArchConfig(name="tiny", arch_type="dense", n_layers=4, d_model=256,
+                  n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=1000)
+
+
+def test_greedy_within_5pct_of_oracle():
+    """Paper Section 3.7: greedy within 5% of the exhaustive optimum."""
+    wt = Workload(batch=1, prompt_tokens=32, decode_tokens=32, samples=4)
+    devices = [EDGE_NPU, EDGE_GPU_NVIDIA]
+    oracle = exhaustive_oracle(TINY, wt, devices, max_stages=12)
+    greedy = GreedyOrchestrator(
+        devices, Constraints(latency_budget_factor=None)).assign(TINY, wt)
+    assert greedy.energy_j <= oracle.energy_j * 1.05
+
+
+def test_heterogeneous_beats_homogeneous_simultaneously():
+    """Paper Table 3's qualitative claim at latency_budget_factor=1.0."""
+    orch = GreedyOrchestrator(EDGE_PLATFORM,
+                              Constraints(latency_budget_factor=1.0))
+    a = orch.assign(GPT2_125M, W)
+    stages = decompose(GPT2_125M, W)
+    best_energy = best_lat = float("inf")
+    for dev in EDGE_PLATFORM:
+        pc = plan_costs(stages, homogeneous_assignment(stages, dev),
+                        workload=W)
+        best_lat = min(best_lat, pc.makespan_s)
+    gpu = plan_costs(stages, homogeneous_assignment(stages, EDGE_GPU_NVIDIA),
+                     workload=W)
+    assert a.latency_s <= best_lat * 1.02
+    assert len(a.device_names()) >= 2, "orchestration must be heterogeneous"
+
+
+def test_unconstrained_energy_matches_paper_scale():
+    """Without a latency constraint the greedy reproduces the paper's ~48%
+    energy reduction vs homogeneous GPU (everything memory-bound -> NPU)."""
+    orch = GreedyOrchestrator(EDGE_PLATFORM,
+                              Constraints(latency_budget_factor=None))
+    a = orch.assign(GPT2_125M, W)
+    stages = decompose(GPT2_125M, W)
+    gpu = plan_costs(stages, homogeneous_assignment(stages, EDGE_GPU_NVIDIA),
+                     workload=W)
+    reduction = 1 - a.energy_j / gpu.energy_j
+    assert reduction > 0.35, f"only {reduction:.1%} energy reduction"
+
+
+def test_memory_constraints_respected():
+    tiny_mem = EDGE_NPU.with_overrides(mem_cap=1e6)   # 1 MB NPU
+    orch = GreedyOrchestrator([tiny_mem, EDGE_GPU_NVIDIA])
+    a = orch.assign(GPT2_125M, W)
+    used = {}
+    stages = {s.name: s for s in decompose(GPT2_125M, W)}
+    for name, dev in a.mapping.items():
+        used[dev.name] = used.get(dev.name, 0.0) + stages[name].param_bytes
+    for dev_name, bytes_used in used.items():
+        cap = next(d.mem_cap for d in [tiny_mem, EDGE_GPU_NVIDIA]
+                   if d.name == dev_name)
+        assert bytes_used <= cap * 0.9 + 1
+
+
+def test_infeasible_when_nothing_fits():
+    tiny1 = EDGE_NPU.with_overrides(mem_cap=1e3)
+    tiny2 = EDGE_CPU.with_overrides(mem_cap=1e3)
+    a = GreedyOrchestrator([tiny1, tiny2]).assign(GPT2_125M, W)
+    assert not a.feasible and a.violations
+
+
+def test_failure_reassignment_excludes_failed_device():
+    orch = GreedyOrchestrator(EDGE_PLATFORM)
+    a = orch.reassign_on_failure(GPT2_125M, W,
+                                 failed=["nvidia-rtx-pro-5000"])
+    assert "nvidia-rtx-pro-5000" not in a.device_names()
+    assert a.mapping, "must still produce an assignment"
+
+
+def test_pareto_frontier_nondominated():
+    po = ParetoOrchestrator(EDGE_PLATFORM)
+    front = po.frontier(GPT2_125M, W, sample_budgets=(5, 20),
+                        n_latency_points=4)
+    assert front, "frontier must be non-empty"
+    pts = [(c["energy_j"], c["latency_s"], -c["coverage"]) for c in front]
+    assert sorted(pareto_front(pts)) == list(range(len(pts)))
+
+
+def test_latency_budget_orders_energy():
+    """Looser latency budget can only lower (or keep) minimized energy."""
+    results = []
+    for factor in (1.0, 2.0, None):
+        a = GreedyOrchestrator(
+            EDGE_PLATFORM,
+            Constraints(latency_budget_factor=factor)).assign(GPT2_125M, W)
+        results.append(a.energy_j)
+    assert results[0] >= results[1] * 0.999 >= results[2] * 0.998

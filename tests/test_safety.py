@@ -1,0 +1,133 @@
+"""Safety framework tests: thermal RC + throttle, health/fault tolerance,
+input validation, output sanity (paper Section 3.4 / Tables 10-12)."""
+import numpy as np
+import pytest
+
+from repro.core import (Health, HealthMonitor, InputValidator, OutputSanitizer,
+                        SafetyMonitor, ThermalModel, THETA_THROTTLE)
+from repro.core.devices import EDGE_GPU_NVIDIA, EDGE_NPU, EDGE_PLATFORM
+
+
+# --------------------------------------------------------------- thermal
+def test_thermal_steady_state():
+    tm = ThermalModel(EDGE_GPU_NVIDIA)
+    for _ in range(500):
+        st = tm.step(100.0, 5.0)
+    expected = EDGE_GPU_NVIDIA.t_ambient + 100.0 * EDGE_GPU_NVIDIA.thermal_r
+    assert abs(st.temp_c - expected) < 0.5
+
+
+def test_proactive_throttle_before_hardware_limit():
+    """Sustained near-peak power must trigger the theta=0.85 proactive
+    throttle strictly below t_max (zero hardware throttle events)."""
+    tm = ThermalModel(EDGE_GPU_NVIDIA)
+    throttled = False
+    for _ in range(1000):
+        power = 295.0 * tm.state.throttle   # throttle feeds back into power
+        st = tm.step(power, 5.0)
+        throttled |= st.throttle < 1.0
+    assert throttled, "throttle never engaged"
+    assert st.temp_c < EDGE_GPU_NVIDIA.t_max
+    assert st.events == 0, "hardware throttling fired — protection failed"
+
+
+def test_cooling_restores_full_speed():
+    tm = ThermalModel(EDGE_GPU_NVIDIA)
+    for _ in range(300):
+        tm.step(295.0, 5.0)
+    for _ in range(300):
+        st = tm.step(5.0, 5.0)
+    assert st.throttle == 1.0
+    assert st.temp_c < THETA_THROTTLE * EDGE_GPU_NVIDIA.t_max
+
+
+# --------------------------------------------------------------- faults
+def test_fault_recovery_within_budget_zero_loss():
+    hm = HealthMonitor(EDGE_PLATFORM)
+    rec = hm.fail_device("nvidia-rtx-pro-5000", now_s=10.0,
+                         inflight_queries=32)
+    assert rec.recovery_ms <= 100.0           # paper: redistribute <=100 ms
+    assert rec.queries_lost == 0              # paper Table 11: zero loss
+    assert "nvidia-rtx-pro-5000" not in hm.healthy_devices()
+    assert rec.throughput_factor < 1.0
+
+
+def test_total_failure_loses_queries():
+    hm = HealthMonitor(EDGE_PLATFORM)
+    for d in EDGE_PLATFORM[:-1]:
+        hm.fail_device(d.name, 0.0)
+    rec = hm.fail_device(EDGE_PLATFORM[-1].name, 0.0, inflight_queries=7)
+    assert rec.queries_lost == 7
+
+
+def test_degraded_latency_bound():
+    hm = HealthMonitor(EDGE_PLATFORM)
+    hm.fail_device("intel-ai-boost-npu", 0.0)
+    # D / D_healthy = 4/3
+    assert hm.degraded_latency_bound(1.0) == pytest.approx(4.0 / 3.0)
+
+
+def test_recovery_reintroduces_at_half_capacity():
+    hm = HealthMonitor(EDGE_PLATFORM)
+    hm.fail_device("intel-ai-boost-npu", 0.0)
+    hm.recover_device("intel-ai-boost-npu")
+    assert hm.health["intel-ai-boost-npu"] == Health.DEGRADED
+    assert hm.capacity["intel-ai-boost-npu"] == 0.5
+    hm.promote_if_stable("intel-ai-boost-npu", clean_inferences=100)
+    assert hm.health["intel-ai-boost-npu"] == Health.HEALTHY
+
+
+def test_timeout_detector():
+    hm = HealthMonitor(EDGE_PLATFORM)
+    assert hm.observe_latency("intel-ai-boost-npu", observed_s=1.1,
+                              expected_s=0.1)
+    assert hm.health["intel-ai-boost-npu"] == Health.FAILED
+
+
+def test_error_rate_detector_degrades():
+    hm = HealthMonitor(EDGE_PLATFORM)
+    for _ in range(50):
+        hm.observe_kernel("intel-core-ultra9-285hx", ok=True)
+    for _ in range(5):
+        hm.observe_kernel("intel-core-ultra9-285hx", ok=False)
+    assert hm.health["intel-core-ultra9-285hx"] == Health.DEGRADED
+
+
+# --------------------------------------------------------------- adversarial
+def test_input_validation_blocks_attacks():
+    v = InputValidator(max_seq_len=128, vocab_size=1000)
+    # oversized (10x context) — paper Table 12: blocked 100%
+    assert not v.validate(np.zeros(1280, np.int32), 1.0).ok
+    # malformed (out-of-range ids == bad encoding)
+    assert not v.validate(np.array([5, -2, 7]), 2.0).ok
+    assert not v.validate(np.array([5, 2000, 7]), 3.0).ok
+    # empty / wrong rank
+    assert not v.validate(np.zeros((2, 2), np.int32), 4.0).ok
+    # legitimate input passes
+    assert v.validate(np.arange(64, dtype=np.int32), 5.0).ok
+
+
+def test_rate_limiting():
+    v = InputValidator(max_seq_len=128, vocab_size=1000,
+                       max_requests_per_s=10)
+    ok = sum(v.validate(np.arange(4, dtype=np.int32), now_s=0.0).ok
+             for _ in range(100))
+    assert ok <= 11, "rate limiter admitted a flood"
+
+
+def test_output_sanitizer_repetition_and_length():
+    s = OutputSanitizer(expected_len=50)
+    assert not s.check(np.zeros(101, np.int32)).ok            # length cap
+    rep = np.array([7] * 95 + [1, 2, 3, 4, 5])
+    assert not s.check(rep).ok                                # repetition
+    healthy = np.arange(80) % 13
+    assert s.check(healthy).ok
+
+
+def test_safety_monitor_integration():
+    sm = SafetyMonitor(EDGE_PLATFORM, max_seq_len=256, vocab_size=1000)
+    th = sm.thermal_step({"nvidia-rtx-pro-5000": 295.0}, dt_s=120.0)
+    assert set(th) == {d.name for d in EDGE_PLATFORM}
+    t_bound, m_bound = sm.resource_bounds(0.1, 1e9)
+    assert t_bound == pytest.approx(0.5)
+    assert m_bound == pytest.approx(1.5e9)

@@ -1,0 +1,69 @@
+"""Serving engine behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ArchConfig, Model
+from repro.serving import ServingEngine
+
+CFG = ArchConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    model = Model(CFG, dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    return ServingEngine(model, params, max_new_tokens=8)
+
+
+def test_sample_counts_and_shapes(engine):
+    prompts = [np.array([1, 2, 3], np.int32), np.array([4, 5], np.int32),
+               np.array([7, 8, 9], np.int32)]
+    res = engine.generate(prompts, n_samples=4)
+    assert len(res) == 3
+    for r in res:
+        assert len(r.samples) == 4
+        assert all(s.shape == (8,) for s in r.samples)
+        assert all(0 <= s.min() and s.max() < CFG.padded_vocab
+                   for s in r.samples)
+        assert len(r.logprobs) == 4
+        assert all(lp <= 0 for lp in r.logprobs)
+
+
+def test_results_keep_request_order(engine):
+    """Length-grouped batching must return results in input order."""
+    prompts = [np.array([1] * n, np.int32) for n in (5, 2, 5, 3, 2)]
+    res = engine.generate(prompts, n_samples=1)
+    for p, r in zip(prompts, res):
+        np.testing.assert_array_equal(r.prompt, p)
+
+
+def test_deterministic_given_rng(engine):
+    prompts = [np.array([1, 2, 3], np.int32)]
+    a = engine.generate(prompts, n_samples=2, rng=jax.random.key(7))
+    b = engine.generate(prompts, n_samples=2, rng=jax.random.key(7))
+    for s1, s2 in zip(a[0].samples, b[0].samples):
+        np.testing.assert_array_equal(s1, s2)
+    c = engine.generate(prompts, n_samples=2, rng=jax.random.key(8))
+    assert any(not np.array_equal(s1, s2)
+               for s1, s2 in zip(a[0].samples, c[0].samples))
+
+
+def test_temperature_zeroish_is_greedyish(engine):
+    prompts = [np.array([1, 2, 3], np.int32)]
+    res = engine.generate(prompts, n_samples=4, temperature=1e-4)
+    first = res[0].samples[0]
+    for s in res[0].samples[1:]:
+        np.testing.assert_array_equal(s, first)
+
+
+def test_eos_truncation():
+    model = Model(CFG, dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, max_new_tokens=8, eos_token=0)
+    res = eng.generate([np.array([1, 2], np.int32)], n_samples=3,
+                       temperature=2.0, rng=jax.random.key(1))
+    for s in res[0].samples:
+        assert 0 not in s  # truncated before the eos token

@@ -1,0 +1,75 @@
+"""SSM variant tests: split projections, kernel path, decode equivalence, and
+a hypothesis property sweep on the chunk invariance of the SSD scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import ArchConfig, Model, SSMConfig
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+BASE = ArchConfig(name="s", arch_type="ssm", n_layers=2, d_model=64,
+                  n_heads=1, n_kv_heads=1, d_ff=0, vocab_size=97,
+                  rope_variant="none",
+                  ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+                  layer_pattern=("m",))
+
+
+@given(chunk=st.sampled_from([4, 8, 16, 32]))
+@settings(max_examples=4, deadline=None)
+def test_ssd_chunk_size_invariance(chunk):
+    """Property: the SSD output must not depend on the chunk size."""
+    B, L, H, P, N = 2, 32, 2, 8, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, H, N))
+    Cm = jax.random.normal(ks[4], (B, L, H, N))
+    y_ref, s_ref = ssd_chunked(x, dt, A, Bm, Cm, chunk=L)  # single chunk
+    y, s = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_split_proj_forward_and_decode():
+    cfg = BASE.with_overrides(ssm_split_proj=True)
+    model = Model(cfg, dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    assert "in_proj_z" in params["blocks"]["l0"]["ssm"]
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 97)
+    cache = model.init_cache(2, 20)
+    _, cache, _ = model.forward(params, {"tokens": toks}, cache)
+    cur = toks
+    for step in range(3):
+        nt = jax.random.randint(jax.random.key(5 + step), (2, 1), 0, 97)
+        pos = jnp.full((2, 1), 16 + step, jnp.int32)
+        ld, cache, _ = model.forward(params, {"tokens": nt, "positions": pos},
+                                     cache)
+        cur = jnp.concatenate([cur, nt], 1)
+        lf, _, _ = model.forward(params, {"tokens": cur})
+        np.testing.assert_allclose(np.asarray(ld[:, 0]), np.asarray(lf[:, -1]),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_initial_state_threading():
+    """ssd_chunked(init_state) == running the first tokens then the rest."""
+    B, L, H, P, N = 1, 16, 2, 8, 16
+    ks = jax.random.split(jax.random.key(2), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, H, N))
+    Cm = jax.random.normal(ks[4], (B, L, H, N))
+    y_all, s_all = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    y1, s1 = ssd_chunked(x[:, :8], dt[:, :8], A, Bm[:, :8], Cm[:, :8], chunk=8)
+    y2, s2 = ssd_chunked(x[:, 8:], dt[:, 8:], A, Bm[:, 8:], Cm[:, 8:],
+                         chunk=8, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_all), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
+                               rtol=2e-4, atol=2e-4)
