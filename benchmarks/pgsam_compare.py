@@ -1,0 +1,163 @@
+"""Greedy vs exhaustive-oracle vs PGSAM comparison (the v2 tentpole bench).
+
+Emits a JSON document with, per small case (<= 12 stages, where the
+exponential oracle is tractable): energy, makespan and wall-clock for all
+three orchestrators plus PGSAM/oracle and greedy/oracle energy ratios; and,
+on the heterogeneous 4-device edge fixture: the epsilon-constraint greedy
+sweep frontier vs the PGSAM archive frontier with their shared-reference
+2-D hypervolumes.
+
+All randomness is seeded (PGSAMConfig.seed) — the numbers are reproducible
+run-to-run.
+
+Run: PYTHONPATH=src python benchmarks/pgsam_compare.py [--out pgsam.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List
+
+from repro.configs.paper_models import GPT2_125M
+from repro.core import (Constraints, GreedyOrchestrator, Workload, decompose,
+                        exhaustive_oracle, hypervolume_2d)
+from repro.core.devices import (EDGE_CPU, EDGE_GPU_NVIDIA, EDGE_NPU,
+                                EDGE_PLATFORM)
+from repro.models import ArchConfig
+from repro.qeil2 import PGSAMConfig, PGSAMOrchestrator
+
+SEED = 0
+
+TINY4 = ArchConfig(name="tiny-4l", arch_type="dense", n_layers=4, d_model=256,
+                   n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=1000)
+TINY5 = ArchConfig(name="tiny-5l", arch_type="dense", n_layers=5, d_model=320,
+                   n_heads=4, n_kv_heads=2, d_ff=640, vocab_size=1000)
+
+SMALL_W = Workload(batch=1, prompt_tokens=32, decode_tokens=32, samples=4)
+
+# (case name, config, device set) — all decompose to <= 12 stages
+SMALL_CASES = [
+    ("tiny4_npu_gpu", TINY4, [EDGE_NPU, EDGE_GPU_NVIDIA]),
+    ("tiny4_cpu_npu", TINY4, [EDGE_CPU, EDGE_NPU]),
+    ("tiny5_npu_gpu", TINY5, [EDGE_NPU, EDGE_GPU_NVIDIA]),
+]
+
+HETERO_W = Workload(batch=1, prompt_tokens=128, decode_tokens=256, samples=20)
+
+
+def _small_case(name: str, cfg: ArchConfig, devices: List) -> Dict:
+    n_stages = len(decompose(cfg, SMALL_W))
+    unconstrained = Constraints(latency_budget_factor=None)
+
+    t0 = time.perf_counter()
+    oracle = exhaustive_oracle(cfg, SMALL_W, devices, max_stages=12)
+    t_oracle = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    greedy = GreedyOrchestrator(devices, unconstrained).assign(cfg, SMALL_W)
+    t_greedy = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    pgsam = PGSAMOrchestrator(devices, unconstrained,
+                              config=PGSAMConfig(seed=SEED)).assign(
+                                  cfg, SMALL_W)
+    t_pgsam = time.perf_counter() - t0
+
+    return {
+        "case": name, "n_stages": n_stages,
+        "devices": [d.name for d in devices],
+        "oracle": {"energy_j": oracle.energy_j,
+                   "makespan_s": oracle.latency_s,
+                   "wall_clock_s": t_oracle},
+        "greedy": {"energy_j": greedy.energy_j,
+                   "makespan_s": greedy.latency_s,
+                   "wall_clock_s": t_greedy},
+        "pgsam": {"energy_j": pgsam.energy_j,
+                  "makespan_s": pgsam.latency_s,
+                  "wall_clock_s": t_pgsam},
+        "pgsam_over_oracle": pgsam.energy_j / oracle.energy_j,
+        "greedy_over_oracle": greedy.energy_j / oracle.energy_j,
+        "pgsam_within_5pct": pgsam.energy_j <= oracle.energy_j * 1.05,
+    }
+
+
+def _greedy_sweep_points(cfg: ArchConfig, w: Workload,
+                         devices: List) -> List[Dict]:
+    """Epsilon-constraint greedy baseline: the v1 way to trace a frontier."""
+    from repro.core.orchestrator import greedy_sla_sweep
+    base = GreedyOrchestrator(devices,
+                              Constraints(latency_budget_factor=None)).assign(
+                                  cfg, w)
+    points = [{"energy_j": base.energy_j, "makespan_s": base.latency_s}]
+    for a in greedy_sla_sweep(devices, cfg, w, base.latency_s):
+        if a.mapping and a.feasible:
+            points.append({"energy_j": a.energy_j,
+                           "makespan_s": a.latency_s})
+    return points
+
+
+def _hetero_fixture() -> Dict:
+    devices = EDGE_PLATFORM            # the heterogeneous 4-device fixture
+    cfg, w = GPT2_125M, HETERO_W
+
+    t0 = time.perf_counter()
+    greedy_pts = _greedy_sweep_points(cfg, w, devices)
+    t_greedy = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    orch = PGSAMOrchestrator(devices, Constraints(latency_budget_factor=None),
+                             config=PGSAMConfig(seed=SEED))
+    frontier = orch.pareto_frontier(cfg, w)
+    t_pgsam = time.perf_counter() - t0
+    pgsam_pts = [{"energy_j": a.energy_j, "makespan_s": a.latency_s}
+                 for a in frontier if a.mapping]
+
+    # shared reference: 10% beyond the worst point of either frontier, so the
+    # two hypervolumes are directly comparable.
+    all_pts = greedy_pts + pgsam_pts
+    ref = (1.1 * max(p["energy_j"] for p in all_pts),
+           1.1 * max(p["makespan_s"] for p in all_pts))
+    hv_greedy = hypervolume_2d(
+        [(p["energy_j"], p["makespan_s"]) for p in greedy_pts], ref)
+    hv_pgsam = hypervolume_2d(
+        [(p["energy_j"], p["makespan_s"]) for p in pgsam_pts], ref)
+
+    return {
+        "model": cfg.name, "devices": [d.name for d in devices],
+        "greedy_frontier": {"points": greedy_pts,
+                            "hypervolume": hv_greedy,
+                            "wall_clock_s": t_greedy},
+        "pgsam_frontier": {"points": pgsam_pts,
+                           "hypervolume": hv_pgsam,
+                           "wall_clock_s": t_pgsam},
+        "hv_ref": list(ref),
+        "pgsam_hv_ge_greedy": hv_pgsam >= hv_greedy,
+    }
+
+
+def run(verbose: bool = True) -> Dict:
+    result = {
+        "seed": SEED,
+        "small_cases": [_small_case(*c) for c in SMALL_CASES],
+        "hetero_4device": _hetero_fixture(),
+    }
+    result["all_within_5pct_of_oracle"] = all(
+        c["pgsam_within_5pct"] for c in result["small_cases"])
+    if verbose:
+        print(json.dumps(result, indent=2))
+    return result
+
+
+if __name__ == "__main__":
+    out_path = None
+    if "--out" in sys.argv:
+        idx = sys.argv.index("--out") + 1
+        if idx >= len(sys.argv):
+            sys.exit("usage: pgsam_compare.py [--out FILE]")
+        out_path = sys.argv[idx]
+    res = run()
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(res, fh, indent=2)
+        print(f"wrote {out_path}", file=sys.stderr)

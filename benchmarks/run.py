@@ -33,6 +33,8 @@ BENCHES = [
      "mean_gain_pp"),
     ("roofline_table", "benchmarks.roofline_table", "n_analyzed"),
     ("kernel_bench", "benchmarks.kernel_bench", "flash_attention_us"),
+    ("pgsam_compare", "benchmarks.pgsam_compare",
+     "all_within_5pct_of_oracle"),
 ]
 
 

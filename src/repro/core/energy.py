@@ -105,20 +105,12 @@ class PlanCosts:
         return out
 
 
-def plan_costs(stages: List[Stage], assignment: Dict[str, DeviceProfile],
-               quant: str = "bf16", workload: Optional[Workload] = None,
-               throttle: Optional[Dict[str, float]] = None) -> PlanCosts:
-    """Cost a full stage->device assignment, including cross-device activation
-    transfers whenever consecutive layers live on different devices."""
-    throttle = throttle or {}
-    execs = []
-    for st in stages:
-        dev = assignment[st.name]
-        execs.append(execute_stage(st, dev, quant,
-                                   throttle.get(dev.name, 1.0)))
-
-    # boundary transfers: activations (n_tokens x d_model) cross a link
-    # whenever consecutive stages of the same phase sit on different devices.
+def boundary_transfer_bytes(execs: List[StageExecution],
+                            workload: Optional[Workload] = None) -> float:
+    """Bytes crossing a link: activations (n_tokens x d_model) transfer
+    whenever consecutive stages of the same phase sit on different devices.
+    Shared by the v1 and v2 cost models so their transfer accounting can
+    never drift apart."""
     transfer_bytes = 0.0
     by_phase: Dict[str, List[StageExecution]] = {}
     for e in execs:
@@ -134,6 +126,39 @@ def plan_costs(stages: List[Stage], assignment: Dict[str, DeviceProfile],
                                        max(a.stage.width, 1))
                 else:
                     transfer_bytes += a.stage.bytes_moved * 0.01
+    return transfer_bytes
+
+
+def plan_costs(stages: List[Stage], assignment: Dict[str, DeviceProfile],
+               quant: str = "bf16", workload: Optional[Workload] = None,
+               throttle: Optional[Dict[str, float]] = None,
+               model: str = "v1",
+               temps: Optional[Dict[str, float]] = None,
+               headroom: float = 0.9) -> PlanCosts:
+    """Cost a full stage->device assignment, including cross-device activation
+    transfers whenever consecutive layers live on different devices.
+
+    ``model="v2"`` dispatches to the DASI/CPQ/Phi physics-grounded energy
+    equation (`repro.qeil2.energy_v2`); the default keeps the v1 path
+    bit-for-bit reproducible. ``temps`` (device -> junction degC) and
+    ``headroom`` (allocator fraction that counts as CPQ=1) only affect the v2
+    path, which models temperature-dependent leakage and capacity pressure.
+    """
+    if model == "v2":
+        from repro.qeil2.energy_v2 import plan_costs_v2
+        return plan_costs_v2(stages, assignment, quant, workload,
+                             throttle=throttle, temps=temps,
+                             headroom=headroom)
+    if model != "v1":
+        raise ValueError(f"unknown energy model {model!r} (want 'v1' or 'v2')")
+    throttle = throttle or {}
+    execs = []
+    for st in stages:
+        dev = assignment[st.name]
+        execs.append(execute_stage(st, dev, quant,
+                                   throttle.get(dev.name, 1.0)))
+
+    transfer_bytes = boundary_transfer_bytes(execs, workload)
     link_bw = min(d.link_bw for d in assignment.values())
     t_io = transfer_bytes / link_bw if transfer_bytes else 0.0
     e_io = transfer_bytes * TRANSFER_ENERGY_PER_BYTE

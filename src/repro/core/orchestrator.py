@@ -44,18 +44,18 @@ class Constraints:
 @dataclass
 class Assignment:
     mapping: Dict[str, DeviceProfile]
-    costs: PlanCosts
+    costs: Optional[PlanCosts]    # None iff no feasible placement exists
     feasible: bool
     violations: List[str] = field(default_factory=list)
     notes: List[str] = field(default_factory=list)
 
     @property
     def energy_j(self) -> float:
-        return self.costs.energy_j
+        return self.costs.energy_j if self.costs is not None else float("inf")
 
     @property
     def latency_s(self) -> float:
-        return self.costs.makespan_s
+        return self.costs.makespan_s if self.costs is not None else float("inf")
 
     def device_names(self) -> List[str]:
         return sorted({d.name for d in self.mapping.values()})
@@ -64,6 +64,41 @@ class Assignment:
 def _memory_ok(dev: DeviceProfile, used: Dict[str, float], extra: float,
                headroom: float) -> bool:
     return used.get(dev.name, 0.0) + extra <= dev.mem_cap * headroom
+
+
+def latency_budget(constraints: Constraints, stages: Sequence[Stage],
+                   devices: Sequence[DeviceProfile],
+                   quant: str = "bf16") -> float:
+    """Per-device busy-time budget: the SLA if given, else
+    latency_budget_factor x the best homogeneous device's makespan
+    (factor None -> unconstrained energy minimization). Shared by every
+    orchestrator so 'drop-in' engines agree on what the budget means."""
+    if constraints.latency_sla_s is not None:
+        return constraints.latency_sla_s
+    if constraints.latency_budget_factor is None:
+        return float("inf")
+    best = min(sum(execute_stage(st, dev, quant).time_s for st in stages)
+               for dev in devices)
+    return constraints.latency_budget_factor * best
+
+
+def constraint_violations(constraints: Constraints, makespan_s: float,
+                          cfg: ArchConfig, workload: Workload) -> List[str]:
+    """SLA / coverage checks every orchestrator applies to a finished plan
+    (GreedyOrchestrator step 3; PGSAMOrchestrator post-anneal)."""
+    violations: List[str] = []
+    if constraints.latency_sla_s is not None and \
+            makespan_s > constraints.latency_sla_s:
+        violations.append(
+            f"latency {makespan_s * 1e3:.2f} ms > SLA "
+            f"{constraints.latency_sla_s * 1e3:.2f} ms")
+    if constraints.coverage_min is not None:
+        cov = coverage(workload.samples, N=cfg_param_millions(cfg),
+                       T=workload.decode_tokens)
+        if cov < constraints.coverage_min:
+            violations.append(
+                f"coverage {cov:.3f} < {constraints.coverage_min}")
+    return violations
 
 
 class GreedyOrchestrator:
@@ -84,19 +119,8 @@ class GreedyOrchestrator:
                       key=lambda d: d.energy_efficiency(), reverse=True)
 
     def _latency_budget(self, stages: List[Stage]) -> float:
-        """Per-device busy-time budget: the SLA if given, else
-        latency_budget_factor x the best homogeneous device's makespan
-        (factor None -> unconstrained energy minimization)."""
-        if self.constraints.latency_sla_s is not None:
-            return self.constraints.latency_sla_s
-        if self.constraints.latency_budget_factor is None:
-            return float("inf")
-        best = float("inf")
-        for dev in self.devices:
-            t = sum(execute_stage(st, dev, self.quant).time_s
-                    for st in stages)
-            best = min(best, t)
-        return self.constraints.latency_budget_factor * best
+        return latency_budget(self.constraints, stages, self.devices,
+                              self.quant)
 
     def assign(self, cfg: ArchConfig, workload: Workload,
                healthy: Optional[Sequence[str]] = None) -> Assignment:
@@ -192,18 +216,8 @@ class GreedyOrchestrator:
         costs = plan_costs(stages, mapping, self.quant, workload)
 
         # -- step 3: constraint checking
-        violations: List[str] = []
-        c = self.constraints
-        if c.latency_sla_s is not None and costs.makespan_s > c.latency_sla_s:
-            violations.append(
-                f"latency {costs.makespan_s * 1e3:.2f} ms > SLA "
-                f"{c.latency_sla_s * 1e3:.2f} ms")
-        if c.coverage_min is not None:
-            cov = coverage(workload.samples,
-                           N=cfg_param_millions(cfg),
-                           T=workload.decode_tokens)
-            if cov < c.coverage_min:
-                violations.append(f"coverage {cov:.3f} < {c.coverage_min}")
+        violations = constraint_violations(self.constraints, costs.makespan_s,
+                                           cfg, workload)
         return Assignment(mapping, costs, not violations, violations, notes)
 
     @staticmethod
@@ -283,14 +297,43 @@ def exhaustive_oracle(cfg: ArchConfig, workload: Workload,
 
 # --------------------------------------------------------------------- Pareto
 
+# epsilon-constraint schedule shared by every frontier sweep (Pareto sweep,
+# PGSAM seeding, benchmarks): factors of a base latency used as SLAs.
+SLA_SWEEP_FACTORS: Tuple[float, ...] = tuple(0.6 + 0.15 * k for k in range(8))
+
+
+def greedy_sla_sweep(devices: Sequence[DeviceProfile], cfg: ArchConfig,
+                     workload: Workload, base_latency_s: float,
+                     quant: str = "bf16",
+                     factors: Sequence[float] = SLA_SWEEP_FACTORS,
+                     engine: Optional[type] = None,
+                     memory_headroom: float = 0.9) -> List[Assignment]:
+    """One assignment per SLA = factor * base_latency_s (the epsilon-constraint
+    trick that traces an energy/latency frontier out of a single-objective
+    orchestrator). Infeasible points are returned as-is; filter on
+    ``a.mapping and a.feasible``."""
+    engine = engine or GreedyOrchestrator
+    return [engine(devices,
+                   Constraints(latency_sla_s=f * base_latency_s,
+                               memory_headroom=memory_headroom),
+                   quant).assign(cfg, workload)
+            for f in factors]
+
+
 class ParetoOrchestrator:
     """Beyond-paper: epsilon-constraint sweep over latency budgets produces
     the energy/latency/coverage Pareto frontier; pick by scalarized preference
-    or hand the frontier to the caller (examples/pareto_orchestration.py)."""
+    or hand the frontier to the caller (examples/pareto_orchestration.py).
 
-    def __init__(self, devices: Sequence[DeviceProfile], quant: str = "bf16"):
+    ``engine`` is any orchestrator class with the GreedyOrchestrator
+    constructor/assign API — pass `repro.qeil2.PGSAMOrchestrator` to drive the
+    sweep with the v2 annealer instead of the single-pass greedy."""
+
+    def __init__(self, devices: Sequence[DeviceProfile], quant: str = "bf16",
+                 engine: Optional[type] = None):
         self.devices = list(devices)
         self.quant = quant
+        self.engine = engine or GreedyOrchestrator
 
     def frontier(self, cfg: ArchConfig, workload: Workload,
                  sample_budgets: Sequence[int] = (1, 5, 10, 20),
@@ -305,16 +348,16 @@ class ParetoOrchestrator:
                          decode_tokens=workload.decode_tokens, samples=S,
                          bytes_per_param=workload.bytes_per_param,
                          bytes_per_act=workload.bytes_per_act)
-            base = GreedyOrchestrator(self.devices, Constraints(),
-                                      self.quant).assign(cfg, w)
+            base = self.engine(self.devices, Constraints(),
+                               self.quant).assign(cfg, w)
             if not base.mapping:
                 continue
-            lat0 = base.latency_s
-            for k in range(n_latency_points):
-                sla = lat0 * (0.6 + 0.15 * k)
-                orch = GreedyOrchestrator(
-                    self.devices, Constraints(latency_sla_s=sla), self.quant)
-                a = orch.assign(cfg, w)
+            sweep = greedy_sla_sweep(
+                self.devices, cfg, w, base.latency_s, self.quant,
+                factors=tuple(0.6 + 0.15 * k
+                              for k in range(n_latency_points)),
+                engine=self.engine)
+            for a in sweep:
                 if not a.mapping or not a.feasible:
                     continue
                 cov = coverage(S, cfg_param_millions(cfg),

@@ -15,6 +15,7 @@ Two modes:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -32,6 +33,7 @@ class CascadeStats:
     cheap_passed: int = 0
     exact_checked: int = 0
     exact_passed: int = 0
+    skipped: int = 0          # CSVET: exact checks cut short by early stopping
 
     @property
     def verification_savings(self) -> float:
@@ -42,14 +44,23 @@ class CascadeStats:
 
 
 class VerifierCascade:
-    """cheap screen (logprob threshold + majority clustering) -> exact check."""
+    """cheap screen (logprob threshold + majority clustering) -> exact check.
+
+    With ``early_stop`` (CSVET — cheap-score verified early termination), exact
+    verification runs in descending cheap-score order and halts once a verified
+    pass is found: the pass@k outcome for the batch is ``any(pass)``, so once
+    one candidate passes, the remaining candidates — whose cheap-score upper
+    bound is at most the already-passing candidate's — cannot change it.
+    """
 
     def __init__(self, exact_verify: Callable[[np.ndarray], bool],
                  logprob_quantile: float = 0.5,
-                 always_check_top: int = 1):
+                 always_check_top: int = 1,
+                 early_stop: bool = False):
         self.exact_verify = exact_verify
         self.q = logprob_quantile
         self.always_check_top = always_check_top
+        self.early_stop = early_stop
         self.stats = CascadeStats()
 
     def verify(self, samples: Sequence[np.ndarray],
@@ -63,12 +74,22 @@ class VerifierCascade:
         survivors |= set(order[: self.always_check_top].tolist())
         self.stats.cheap_passed += len(survivors)
 
+        # early_stop checks best-cheap-score first so a pass is found with as
+        # few exact calls as possible; without it, keep the original index
+        # order (order is observable only through the verifier's side effects).
+        check_order = [i for i in order.tolist() if i in survivors] \
+            if self.early_stop else [i for i in range(n) if i in survivors]
         out = [False] * n
-        for i in range(n):
-            if i in survivors:
-                self.stats.exact_checked += 1
-                out[i] = bool(self.exact_verify(samples[i]))
-                self.stats.exact_passed += int(out[i])
+        found_pass = False
+        for pos, i in enumerate(check_order):
+            if found_pass:
+                self.stats.skipped += len(check_order) - pos
+                break
+            self.stats.exact_checked += 1
+            out[i] = bool(self.exact_verify(samples[i]))
+            self.stats.exact_passed += int(out[i])
+            if out[i] and self.early_stop:
+                found_pass = True
         return out
 
 
@@ -101,10 +122,9 @@ def run_pass_at_k(engine, tasks: Sequence[Tuple[np.ndarray, Callable]],
         flags = cascade.verify(res.samples, res.logprobs)
         outcomes[i] = flags
         s = cascade.stats
-        stats.candidates += s.candidates
-        stats.cheap_passed += s.cheap_passed
-        stats.exact_checked += s.exact_checked
-        stats.exact_passed += s.exact_passed
+        for f in dataclasses.fields(CascadeStats):
+            setattr(stats, f.name,
+                    getattr(stats, f.name) + getattr(s, f.name))
         dec_toks += res.decode_tokens
         pre_toks += res.prefill_tokens
     cov = empirical_coverage(outcomes, budgets)

@@ -1,0 +1,422 @@
+"""PGSAM — Pareto-Guided Simulated Annealing with Momentum (paper Section 3).
+
+The v2 orchestrator. Where v1's `GreedyOrchestrator` commits to each stage
+placement in a single myopic pass, PGSAM searches the full stage->device
+mapping space with a multi-objective annealer:
+
+* **objectives** — simultaneously minimize ``(energy_j, makespan_s,
+  underutilization)``; the third term rewards spreading work across the
+  platform's aggregate bandwidth instead of piling onto one efficient device.
+* **Pareto guidance** — a bounded non-dominated archive steers acceptance:
+  candidates that extend the archive are always accepted; dominated
+  candidates are accepted with Boltzmann probability on their normalized
+  worsening, so the walk can cross energy barriers early and anneals into the
+  frontier as the temperature cools geometrically.
+* **momentum** — move proposals are biased toward *directions* (target
+  devices) that were recently accepted: heterogeneous platforms have long
+  runs of stages that belong on the same device, and momentum exploits that
+  correlation instead of rediscovering it one uniform move at a time.
+* **seeding** — the walk starts from `GreedyOrchestrator.assign` solutions
+  (several latency budgets), so PGSAM is never worse than greedy and the
+  archive's hypervolume starts at the greedy sweep's.
+* **convergence** — `repro.core.pareto.hypervolume_2d` over the archive's
+  (energy, makespan) projection; the anneal stops when the hypervolume has
+  not improved for ``hv_patience`` iterations.
+
+Everything is deterministic under a fixed ``PGSAMConfig.seed``.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.decomposition import Stage, Workload, decompose
+from repro.core.devices import DeviceProfile
+from repro.core.energy import PlanCosts, plan_costs
+from repro.core.orchestrator import (Assignment, Constraints,
+                                     GreedyOrchestrator,
+                                     constraint_violations, greedy_sla_sweep,
+                                     latency_budget)
+from repro.core.pareto import dominates, hypervolume_2d
+from repro.models.config import ArchConfig
+
+Mapping = Tuple[int, ...]          # stage index -> device index
+
+
+@dataclass(frozen=True)
+class PGSAMConfig:
+    seed: int = 0
+    iters_max: int = 3000
+    # Boltzmann temperature is dimensionless: the barrier height is the sum
+    # of *relative* objective worsenings, so t_init_frac=0.05 means "a 5%
+    # worsening is accepted with prob 1/e at the start", independent of the
+    # workload's absolute joule/second scale; geometric cooling per iter.
+    t_init: Optional[float] = None
+    t_init_frac: float = 0.05      # initial temp when t_init is None
+    cooling: float = 0.998
+    # probability a proposal reuses a recently-accepted target device
+    momentum: float = 0.6
+    momentum_window: int = 32
+    archive_max: int = 64
+    # convergence: stop when frontier hypervolume hasn't improved by hv_tol
+    # (relative) for hv_patience consecutive iterations
+    hv_patience: int = 400
+    hv_check_every: int = 25
+    hv_tol: float = 1e-4
+
+
+@dataclass
+class ArchiveEntry:
+    objectives: Tuple[float, float, float]   # energy_j, makespan_s, underutil
+    mapping: Mapping
+    costs: PlanCosts
+
+
+@dataclass
+class PGSAMResult:
+    archive: List[ArchiveEntry]
+    best_energy: ArchiveEntry                # min-energy feasible point seen
+    iterations: int
+    accepted: int
+    hypervolume: float
+    hv_ref: Tuple[float, float]
+
+
+class PGSAM:
+    """The annealer itself, independent of the Assignment API (see
+    `PGSAMOrchestrator` for the drop-in orchestrator wrapper)."""
+
+    def __init__(self, stages: Sequence[Stage],
+                 devices: Sequence[DeviceProfile],
+                 quant: str = "bf16",
+                 workload: Optional[Workload] = None,
+                 config: PGSAMConfig = PGSAMConfig(),
+                 memory_headroom: float = 0.9,
+                 energy_model: str = "v1",
+                 temps: Optional[Dict[str, float]] = None,
+                 latency_budget_s: float = float("inf")):
+        self.stages = list(stages)
+        self.devices = list(devices)
+        self.quant = quant
+        self.workload = workload
+        self.cfg = config
+        self.headroom = memory_headroom
+        self.energy_model = energy_model
+        self.temps = temps
+        self.latency_budget_s = latency_budget_s
+        self.rng = np.random.default_rng(config.seed)
+        # per-device param_bytes capacity in bytes
+        self._caps = [d.mem_cap * memory_headroom for d in devices]
+
+    # ---------------------------------------------------------------- eval
+    def _mem_ok(self, mapping: Mapping) -> bool:
+        used = [0.0] * len(self.devices)
+        for si, di in enumerate(mapping):
+            used[di] += self.stages[si].param_bytes
+            if used[di] > self._caps[di]:
+                return False
+        return True
+
+    def _evaluate(self, mapping: Mapping) -> ArchiveEntry:
+        assign = {st.name: self.devices[di]
+                  for st, di in zip(self.stages, mapping)}
+        costs = plan_costs(self.stages, assign, self.quant, self.workload,
+                           model=self.energy_model, temps=self.temps,
+                           headroom=self.headroom)
+        makespan = costs.makespan_s
+        per_dev = costs.per_device_time()
+        busy = sum(per_dev.values())
+        n = len(self.devices)
+        underutil = 1.0 - busy / (n * makespan) if makespan > 0 else 0.0
+        return ArchiveEntry((costs.energy_j, makespan, underutil),
+                            mapping, costs)
+
+    def _feasible(self, entry: ArchiveEntry) -> bool:
+        return entry.objectives[1] <= self.latency_budget_s
+
+    # ------------------------------------------------------------- archive
+    def _archive_insert(self, archive: List[ArchiveEntry],
+                        cand: ArchiveEntry) -> bool:
+        """Insert if non-dominated; prune dominated members. Returns whether
+        the candidate entered the archive."""
+        if any(dominates(a.objectives, cand.objectives) or
+               a.objectives == cand.objectives for a in archive):
+            return False
+        archive[:] = [a for a in archive
+                      if not dominates(cand.objectives, a.objectives)]
+        archive.append(cand)
+        if len(archive) > self.cfg.archive_max:
+            # deterministic thinning: sort by energy, keep evenly spaced
+            # points including both extremes (preserves frontier span).
+            archive.sort(key=lambda a: a.objectives)
+            idx = np.linspace(0, len(archive) - 1,
+                              self.cfg.archive_max).round().astype(int)
+            archive[:] = [archive[i] for i in sorted(set(idx.tolist()))]
+        return True
+
+    # ------------------------------------------------------------ proposal
+    def _propose(self, mapping: Mapping,
+                 momentum_devs: deque) -> Optional[Mapping]:
+        n_stage, n_dev = len(mapping), len(self.devices)
+        if n_dev < 2:
+            return None
+        use_momentum = (len(momentum_devs) > 0 and
+                        self.rng.random() < self.cfg.momentum)
+        if use_momentum:
+            # repeat a recently-accepted direction: pull another stage onto
+            # a device the walk has lately had success moving work to.
+            di = momentum_devs[int(self.rng.integers(len(momentum_devs)))]
+            cands = [si for si in range(n_stage) if mapping[si] != di]
+            if not cands:
+                use_momentum = False
+            else:
+                si = int(cands[int(self.rng.integers(len(cands)))])
+                new = list(mapping)
+                new[si] = di
+                return tuple(new)
+        si = int(self.rng.integers(n_stage))
+        di = int(self.rng.integers(n_dev - 1))
+        if di >= mapping[si]:
+            di += 1
+        new = list(mapping)
+        new[si] = di
+        return tuple(new)
+
+    # ---------------------------------------------------------------- run
+    def optimize(self, seeds: Sequence[Mapping]) -> PGSAMResult:
+        seeds = [tuple(s) for s in seeds if self._mem_ok(tuple(s))]
+        if not seeds:
+            raise ValueError("no memory-feasible seed mapping")
+        entries = [self._evaluate(s) for s in seeds]
+        archive: List[ArchiveEntry] = []
+        for e in entries:
+            self._archive_insert(archive, e)
+
+        # lexicographic: feasible beats infeasible, then min energy
+        def best_key(e: ArchiveEntry) -> Tuple[bool, float]:
+            return (not self._feasible(e), e.objectives[0])
+
+        best = min(entries, key=best_key)
+        current = best
+
+        # fixed hypervolume reference: 20% beyond the worst seed objectives,
+        # so 'did the frontier move' is measured against a stable yardstick.
+        ref = (1.2 * max(e.objectives[0] for e in entries),
+               1.2 * max(e.objectives[1] for e in entries))
+        hv = hypervolume_2d([(a.objectives[0], a.objectives[1])
+                             for a in archive], ref)
+        last_improve = 0
+
+        temp = (self.cfg.t_init if self.cfg.t_init is not None
+                else self.cfg.t_init_frac)
+        momentum_devs: deque = deque(maxlen=self.cfg.momentum_window)
+        accepted = 0
+        it = 0
+        for it in range(1, self.cfg.iters_max + 1):
+            cand_map = self._propose(current.mapping, momentum_devs)
+            if cand_map is None:
+                break
+            if self._mem_ok(cand_map):
+                cand = self._evaluate(cand_map)
+                if best_key(cand) < best_key(best):
+                    best = cand
+                accept = self._accept(current, cand, archive, temp)
+                if accept:
+                    # record the accepted direction (the device that gained a
+                    # stage) for momentum-biased proposals.
+                    diff = [si for si, (a, b) in
+                            enumerate(zip(current.mapping, cand.mapping))
+                            if a != b]
+                    if diff:
+                        momentum_devs.append(cand.mapping[diff[0]])
+                    current = cand
+                    accepted += 1
+            temp *= self.cfg.cooling
+            if it % self.cfg.hv_check_every == 0:
+                new_hv = hypervolume_2d([(a.objectives[0], a.objectives[1])
+                                         for a in archive], ref)
+                if new_hv > hv * (1.0 + self.cfg.hv_tol):
+                    hv = new_hv
+                    last_improve = it
+                if it - last_improve >= self.cfg.hv_patience:
+                    break
+
+        hv = hypervolume_2d([(a.objectives[0], a.objectives[1])
+                             for a in archive], ref)
+        archive.sort(key=lambda a: a.objectives)
+        return PGSAMResult(archive, best, it, accepted, hv, ref)
+
+    def _accept(self, current: ArchiveEntry, cand: ArchiveEntry,
+                archive: List[ArchiveEntry], temp: float) -> bool:
+        entered = self._archive_insert(archive, cand)
+        if dominates(cand.objectives, current.objectives):
+            return True
+        if entered:
+            # Pareto guidance: frontier-extending moves are always taken.
+            return True
+        # dominated or archive-rejected: Boltzmann on the summed *relative*
+        # worsening of the (energy, makespan) pair — dimensionless, so joules
+        # and seconds exert comparable barriers regardless of absolute scale
+        # (underutil is a tie-break objective and deliberately excluded).
+        delta = 0.0
+        for o_new, o_old in zip(cand.objectives[:2], current.objectives[:2]):
+            if o_new > o_old:
+                delta += (o_new - o_old) / max(abs(o_old), 1e-12)
+        if delta <= 0:
+            return True
+        if temp <= 0:
+            return False
+        return bool(self.rng.random() < math.exp(-delta / temp))
+
+
+# ===================================================== orchestrator wrapper
+
+class PGSAMOrchestrator:
+    """Drop-in replacement for `GreedyOrchestrator` (same constructor and
+    `assign` / `reassign_on_failure` API) that anneals the greedy seed with
+    PGSAM. `ParetoOrchestrator`, the safety monitor, examples and benches can
+    swap it in unchanged; `pareto_frontier` additionally exposes the full
+    non-dominated archive of a single anneal."""
+
+    def __init__(self, devices: Sequence[DeviceProfile],
+                 constraints: Constraints = Constraints(),
+                 quant: str = "bf16",
+                 config: PGSAMConfig = PGSAMConfig(),
+                 energy_model: str = "v1",
+                 safety=None):
+        if not devices:
+            raise ValueError("need at least one device")
+        self.devices = list(devices)
+        self.constraints = constraints
+        self.quant = quant
+        self.config = config
+        self.energy_model = energy_model
+        # optional repro.core.safety.SafetyMonitor: its RC thermal states feed
+        # Phi (v2 energy) and its health view feeds reassign_on_failure.
+        self.safety = safety
+        self.last_result: Optional[PGSAMResult] = None
+
+    # -- seeds: greedy at several latency budgets spans the frontier
+    def _greedy_seeds(self, cfg: ArchConfig, workload: Workload,
+                      stages: List[Stage],
+                      devices: List[DeviceProfile]) -> List[Mapping]:
+        dev_idx = {d.name: i for i, d in enumerate(devices)}
+        seeds: List[Mapping] = []
+        lat0: Optional[float] = None
+
+        def keep(a: Assignment, is_balanced: bool = False) -> None:
+            nonlocal lat0
+            if a.mapping and all(st.name in a.mapping for st in stages):
+                seeds.append(tuple(dev_idx[a.mapping[st.name].name]
+                                   for st in stages))
+                if is_balanced and lat0 is None:
+                    lat0 = a.latency_s
+
+        hr = self.constraints.memory_headroom
+        # only the dedicated factor-1.0 run is "balanced" — self.constraints
+        # may carry an SLA while leaving latency_budget_factor at its default
+        for c, balanced in [
+                (self.constraints, False),
+                (Constraints(latency_budget_factor=None,
+                             memory_headroom=hr), False),
+                (Constraints(latency_budget_factor=1.0,
+                             memory_headroom=hr), True),
+                (Constraints(latency_budget_factor=0.7,
+                             memory_headroom=hr), False)]:
+            try:
+                keep(GreedyOrchestrator(devices, c, self.quant).assign(
+                    cfg, workload), is_balanced=balanced)
+            except RuntimeError:
+                pass
+        # epsilon-constraint SLA sweep around the balanced greedy latency:
+        # spans the low-latency end of the frontier, so the archive starts at
+        # (and can only grow beyond) the v1 sweep's hypervolume.
+        if lat0 is not None:
+            for a in greedy_sla_sweep(devices, cfg, workload, lat0,
+                                      self.quant, memory_headroom=hr):
+                keep(a)
+        return list(dict.fromkeys(seeds))      # dedupe, order-stable
+
+    def _anneal(self, cfg: ArchConfig, workload: Workload,
+                healthy: Optional[Sequence[str]]) -> Tuple[
+                    List[Stage], List[DeviceProfile], PGSAMResult]:
+        stages = decompose(cfg, workload)
+        devices = [d for d in self.devices
+                   if healthy is None or d.name in healthy]
+        if not devices:
+            raise RuntimeError("no healthy devices")
+        seeds = self._greedy_seeds(cfg, workload, stages, devices)
+        if not seeds:
+            raise _Infeasible([f"no device subset fits "
+                               f"{sum(s.param_bytes for s in stages)/1e9:.1f} GB"])
+        temps = None
+        if self.safety is not None and self.energy_model == "v2":
+            temps = {n: tm.state.temp_c
+                     for n, tm in self.safety.thermal.items()}
+        sam = PGSAM(stages, devices, self.quant, workload,
+                    config=self.config,
+                    memory_headroom=self.constraints.memory_headroom,
+                    energy_model=self.energy_model, temps=temps,
+                    latency_budget_s=latency_budget(
+                        self.constraints, stages, devices, self.quant))
+        result = sam.optimize(seeds)
+        self.last_result = result
+        return stages, devices, result
+
+    def assign(self, cfg: ArchConfig, workload: Workload,
+               healthy: Optional[Sequence[str]] = None) -> Assignment:
+        try:
+            stages, devices, result = self._anneal(cfg, workload, healthy)
+        except _Infeasible as e:
+            return Assignment({}, None, False, e.violations)
+        best = result.best_energy
+        mapping = {st.name: devices[di]
+                   for st, di in zip(stages, best.mapping)}
+        violations = constraint_violations(self.constraints,
+                                           best.objectives[1], cfg, workload)
+        notes = [f"pgsam: {result.iterations} iters, "
+                 f"{result.accepted} accepted, "
+                 f"archive {len(result.archive)}, "
+                 f"hv {result.hypervolume:.3g}"]
+        return Assignment(mapping, best.costs, not violations, violations,
+                          notes)
+
+    def pareto_frontier(self, cfg: ArchConfig, workload: Workload,
+                        healthy: Optional[Sequence[str]] = None
+                        ) -> List[Assignment]:
+        """Full non-dominated archive of one anneal, as Assignments sorted by
+        energy — the multi-objective counterpart of
+        `ParetoOrchestrator.frontier` from a single optimization run."""
+        try:
+            stages, devices, result = self._anneal(cfg, workload, healthy)
+        except _Infeasible as e:
+            return [Assignment({}, None, False, e.violations)]
+        out = []
+        for entry in result.archive:
+            mapping = {st.name: devices[di]
+                       for st, di in zip(stages, entry.mapping)}
+            # the archive deliberately keeps SLA-violating points (they shape
+            # the frontier); feasibility is re-judged per entry so callers
+            # filtering on `a.feasible` never pick a violating plan.
+            violations = constraint_violations(
+                self.constraints, entry.objectives[1], cfg, workload)
+            out.append(Assignment(mapping, entry.costs, not violations,
+                                  violations,
+                                  notes=[f"underutil "
+                                         f"{entry.objectives[2]:.3f}"]))
+        return out
+
+    def reassign_on_failure(self, cfg: ArchConfig, workload: Workload,
+                            failed: Sequence[str]) -> Assignment:
+        healthy = [d.name for d in self.devices if d.name not in failed]
+        return self.assign(cfg, workload, healthy=healthy)
+
+
+class _Infeasible(Exception):
+    def __init__(self, violations: List[str]):
+        super().__init__("; ".join(violations))
+        self.violations = violations

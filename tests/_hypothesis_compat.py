@@ -1,0 +1,31 @@
+"""Optional-hypothesis shim: import ``given``/``settings``/``st`` from here.
+
+On a bare environment (no ``hypothesis`` installed) the property tests are
+collected and individually skipped instead of erroring the whole module at
+import time — the tier-1 command must collect all modules cleanly and still
+run every non-property test they contain.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                 # pragma: no cover - env
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every strategy call
+        returns an inert placeholder (never executed — the test is skipped)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*a, **k):
+        return lambda fn: fn

@@ -3,8 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CoverageParams, coverage, cost_total, energy_total,
                         fit_coverage_joint, fit_power_law, latency,

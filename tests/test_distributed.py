@@ -124,7 +124,11 @@ SMALL_MESH_SCRIPT = textwrap.dedent("""
         params = jax.jit(model.init, out_shardings=p_sh)(jax.random.key(0))
         opt = init_opt_state(params)
         toks = jnp.zeros((8, 16), jnp.int32)
-        jitted = jax.jit(step, in_shardings=(p_sh, None, None))
+        # params/opt are already committed to their NamedShardings (params via
+        # out_shardings above, opt built from the sharded params), so jit
+        # infers in_shardings; an explicit (p_sh, None, None) would wrongly
+        # constrain the sharded opt state to replicated and fail.
+        jitted = jax.jit(step)
         losses = []
         for i in range(3):
             params, opt, m = jitted(params, opt,
@@ -169,8 +173,7 @@ def test_dryrun_artifacts_all_pass():
         assert art["n_chips"] == (512 if "__multi" in f else 256)
 
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @given(d_in=st.integers(8, 4096), d_out=st.integers(8, 4096),

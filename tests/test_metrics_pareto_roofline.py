@@ -1,8 +1,7 @@
 """Metrics, Pareto utilities, and the HLO collective parser."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (RunMetrics, arithmetic_intensity,
                         collective_bytes_from_hlo, dominates, hypervolume_2d,

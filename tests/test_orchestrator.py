@@ -103,3 +103,15 @@ def test_latency_budget_orders_energy():
             Constraints(latency_budget_factor=factor)).assign(GPT2_125M, W)
         results.append(a.energy_j)
     assert results[0] >= results[1] * 0.999 >= results[2] * 0.998
+
+
+def test_infeasible_assignment_costs_are_safe():
+    """Assignment with costs=None (infeasible) must not crash on the cost
+    properties — they report inf so min()-style comparisons keep working."""
+    tiny1 = EDGE_NPU.with_overrides(mem_cap=1e3)
+    tiny2 = EDGE_CPU.with_overrides(mem_cap=1e3)
+    a = GreedyOrchestrator([tiny1, tiny2]).assign(GPT2_125M, W)
+    assert not a.feasible
+    assert a.costs is None
+    assert a.energy_j == float("inf")
+    assert a.latency_s == float("inf")

@@ -1,0 +1,251 @@
+"""QEIL v2 subsystem: DASI/CPQ/Phi signal properties, the unified energy
+equation's flag-gated behavior, and PGSAM optimality/determinism."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import GPT2_125M
+from repro.core import (Constraints, GreedyOrchestrator, ParetoOrchestrator,
+                        Workload, decompose, exhaustive_oracle,
+                        homogeneous_assignment, hypervolume_2d, plan_costs)
+from repro.core.devices import (EDGE_CPU, EDGE_GPU_NVIDIA, EDGE_NPU,
+                                EDGE_PLATFORM)
+from repro.core.safety import SafetyMonitor
+from repro.models import ArchConfig
+from repro.qeil2 import (PGSAM, PGSAMConfig, PGSAMOrchestrator, cpq,
+                         cpq_power_factor, dasi, execute_stage_v2,
+                         memory_saturation, phi, signals_for)
+
+TINY = ArchConfig(name="tiny", arch_type="dense", n_layers=4, d_model=256,
+                  n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=1000)
+SMALL_W = Workload(batch=1, prompt_tokens=32, decode_tokens=32, samples=4)
+HETERO_W = Workload(batch=1, prompt_tokens=128, decode_tokens=256, samples=20)
+UNCONSTRAINED = Constraints(latency_budget_factor=None)
+
+
+# ------------------------------------------------------------------- signals
+
+def _stage_with_intensity(intensity: float):
+    from repro.core.decomposition import Stage
+    return Stage("s", "decode", 0, flops=intensity * 1e6, bytes_moved=1e6,
+                 param_bytes=1e6, width=64)
+
+
+def test_dasi_monotone_in_intensity_and_bounded():
+    vals = [dasi(_stage_with_intensity(i), EDGE_GPU_NVIDIA)
+            for i in (0.1, 1.0, 10.0, 100.0, 1e4)]
+    assert all(a <= b for a, b in zip(vals, vals[1:]))
+    assert all(0.0 < v <= 1.0 for v in vals)
+    # saturates to exactly 1 at/above the ridge point
+    ridge = EDGE_GPU_NVIDIA.ridge_point
+    assert dasi(_stage_with_intensity(ridge), EDGE_GPU_NVIDIA) == \
+        pytest.approx(1.0)
+    assert dasi(_stage_with_intensity(10 * ridge), EDGE_GPU_NVIDIA) == 1.0
+
+
+def test_dasi_msat_duality():
+    """At the ridge point both subsystems are saturated; off-ridge exactly
+    one of them is."""
+    ridge = EDGE_NPU.ridge_point
+    for mult in (0.1, 0.5, 1.0, 3.0):
+        st = _stage_with_intensity(mult * ridge)
+        d, m = dasi(st, EDGE_NPU), memory_saturation(st, EDGE_NPU)
+        assert max(d, m) == pytest.approx(1.0)
+
+
+def test_cpq_monotone_and_boundaries():
+    assert cpq(0.0, EDGE_NPU) == 0.0
+    vals = [cpq(b, EDGE_NPU) for b in (1e9, 5e9, 10e9, 18e9, 30e9)]
+    assert all(a < b for a, b in zip(vals, vals[1:]))
+    # exactly 1.0 at the headroom limit, >1 beyond it (overcommit)
+    assert cpq(EDGE_NPU.mem_cap * 0.9, EDGE_NPU) == pytest.approx(1.0)
+    assert cpq(EDGE_NPU.mem_cap, EDGE_NPU) > 1.0
+    # the power factor clamps: overcommit doesn't explode the model
+    assert cpq_power_factor(5.0) == cpq_power_factor(1.0)
+    assert cpq_power_factor(0.0) == 1.0
+
+
+def test_phi_decreasing_in_temperature_and_bounded():
+    temps = [25.0, 45.0, 65.0, 85.0, 105.0]
+    vals = [phi(t) for t in temps]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert all(0.0 < v < 1.0 for v in vals)
+    # at reference temperature the yield is 1/(1+rho_ref)
+    from repro.qeil2.signals import PHI_RHO_REF
+    assert phi(25.0) == pytest.approx(1.0 / (1.0 + PHI_RHO_REF))
+
+
+def test_signals_for_defaults_to_ambient():
+    st = _stage_with_intensity(1.0)
+    sig = signals_for(st, EDGE_NPU)
+    assert sig.phi == pytest.approx(phi(EDGE_NPU.t_ambient))
+
+
+# ----------------------------------------------------------------- energy v2
+
+def test_v1_path_bit_identical_with_and_without_flag():
+    stages = decompose(TINY, SMALL_W)
+    m = homogeneous_assignment(stages, EDGE_GPU_NVIDIA)
+    a = plan_costs(stages, m, workload=SMALL_W)
+    b = plan_costs(stages, m, workload=SMALL_W, model="v1")
+    assert a.energy_j == b.energy_j and a.makespan_s == b.makespan_s
+
+
+def test_v2_roofline_time_matches_v1():
+    """v2 changes power, never time: the roofline term is shared physics."""
+    stages = decompose(TINY, SMALL_W)
+    m = homogeneous_assignment(stages, EDGE_NPU)
+    v1 = plan_costs(stages, m, workload=SMALL_W)
+    v2 = plan_costs(stages, m, workload=SMALL_W, model="v2")
+    assert v2.makespan_s == pytest.approx(v1.makespan_s)
+
+
+def test_v2_energy_grows_with_temperature():
+    stages = decompose(TINY, SMALL_W)
+    m = homogeneous_assignment(stages, EDGE_GPU_NVIDIA)
+    cold = plan_costs(stages, m, workload=SMALL_W, model="v2")
+    hot = plan_costs(stages, m, workload=SMALL_W, model="v2",
+                     temps={EDGE_GPU_NVIDIA.name: 85.0})
+    assert hot.energy_j > cold.energy_j
+
+
+def test_v2_energy_grows_with_memory_pressure():
+    st = _stage_with_intensity(1.0)
+    lo = execute_stage_v2(st, EDGE_NPU, resident_bytes=1e9)
+    hi = execute_stage_v2(st, EDGE_NPU, resident_bytes=17e9)
+    assert hi.energy_j > lo.energy_j
+    assert hi.time_s == pytest.approx(lo.time_s)
+
+
+def test_unknown_energy_model_rejected():
+    stages = decompose(TINY, SMALL_W)
+    m = homogeneous_assignment(stages, EDGE_NPU)
+    with pytest.raises(ValueError):
+        plan_costs(stages, m, workload=SMALL_W, model="v3")
+
+
+# --------------------------------------------------------------------- PGSAM
+
+def test_pgsam_deterministic_under_fixed_seed():
+    cfgs = PGSAMConfig(seed=7, iters_max=800)
+    runs = []
+    for _ in range(2):
+        orch = PGSAMOrchestrator([EDGE_NPU, EDGE_GPU_NVIDIA], UNCONSTRAINED,
+                                 config=cfgs)
+        a = orch.assign(TINY, SMALL_W)
+        runs.append((a.energy_j, a.latency_s,
+                     tuple(sorted((k, v.name) for k, v in a.mapping.items())),
+                     tuple(e.objectives for e in orch.last_result.archive)))
+    assert runs[0] == runs[1]
+
+
+def test_pgsam_within_5pct_of_oracle():
+    """Acceptance: PGSAM energy within 5% of the exhaustive optimum on a
+    <= 12-stage case (it also must never be worse than its greedy seed)."""
+    devices = [EDGE_NPU, EDGE_GPU_NVIDIA]
+    oracle = exhaustive_oracle(TINY, SMALL_W, devices, max_stages=12)
+    greedy = GreedyOrchestrator(devices, UNCONSTRAINED).assign(TINY, SMALL_W)
+    pgsam = PGSAMOrchestrator(devices, UNCONSTRAINED,
+                              config=PGSAMConfig(seed=0)).assign(TINY, SMALL_W)
+    assert pgsam.energy_j <= oracle.energy_j * 1.05
+    assert pgsam.energy_j <= greedy.energy_j * (1 + 1e-9)
+
+
+def test_pgsam_frontier_hv_ge_greedy_on_4device_fixture():
+    """Acceptance: PGSAM's archive hypervolume dominates the greedy
+    epsilon-constraint sweep on the heterogeneous 4-device platform."""
+    greedy_pts = []
+    base = GreedyOrchestrator(EDGE_PLATFORM, UNCONSTRAINED).assign(
+        GPT2_125M, HETERO_W)
+    greedy_pts.append((base.energy_j, base.latency_s))
+    for k in range(4):
+        a = GreedyOrchestrator(
+            EDGE_PLATFORM,
+            Constraints(latency_sla_s=base.latency_s * (0.6 + 0.2 * k))
+        ).assign(GPT2_125M, HETERO_W)
+        if a.mapping and a.feasible:
+            greedy_pts.append((a.energy_j, a.latency_s))
+
+    orch = PGSAMOrchestrator(EDGE_PLATFORM, UNCONSTRAINED,
+                             config=PGSAMConfig(seed=0, iters_max=1500))
+    frontier = orch.pareto_frontier(GPT2_125M, HETERO_W)
+    pgsam_pts = [(a.energy_j, a.latency_s) for a in frontier if a.mapping]
+    assert pgsam_pts
+
+    ref = (1.1 * max(p[0] for p in greedy_pts + pgsam_pts),
+           1.1 * max(p[1] for p in greedy_pts + pgsam_pts))
+    assert hypervolume_2d(pgsam_pts, ref) >= hypervolume_2d(greedy_pts, ref)
+
+
+def test_pgsam_memory_constraints_respected():
+    tiny_mem = EDGE_NPU.with_overrides(mem_cap=1e6)
+    orch = PGSAMOrchestrator([tiny_mem, EDGE_GPU_NVIDIA], UNCONSTRAINED,
+                             config=PGSAMConfig(seed=0, iters_max=400))
+    a = orch.assign(TINY, SMALL_W)
+    stages = {s.name: s for s in decompose(TINY, SMALL_W)}
+    used = {}
+    for name, dev in a.mapping.items():
+        used[dev.name] = used.get(dev.name, 0.0) + stages[name].param_bytes
+    assert used.get(tiny_mem.name, 0.0) <= tiny_mem.mem_cap * 0.9 + 1
+
+
+def test_pgsam_infeasible_when_nothing_fits():
+    t1 = EDGE_NPU.with_overrides(mem_cap=1e3)
+    t2 = EDGE_CPU.with_overrides(mem_cap=1e3)
+    a = PGSAMOrchestrator([t1, t2], config=PGSAMConfig(seed=0)).assign(
+        TINY, SMALL_W)
+    assert not a.feasible and a.violations
+    assert a.energy_j == float("inf")         # Optional[PlanCosts] contract
+
+
+def test_pgsam_reassign_on_failure_excludes_failed_device():
+    orch = PGSAMOrchestrator(EDGE_PLATFORM,
+                             config=PGSAMConfig(seed=0, iters_max=400))
+    a = orch.reassign_on_failure(GPT2_125M, HETERO_W,
+                                 failed=["nvidia-rtx-pro-5000"])
+    assert a.mapping and "nvidia-rtx-pro-5000" not in a.device_names()
+
+
+def test_pgsam_respects_latency_sla():
+    base = GreedyOrchestrator(EDGE_PLATFORM, UNCONSTRAINED).assign(
+        GPT2_125M, HETERO_W)
+    sla = base.latency_s * 1.2
+    a = PGSAMOrchestrator(EDGE_PLATFORM, Constraints(latency_sla_s=sla),
+                          config=PGSAMConfig(seed=0, iters_max=800)).assign(
+                              GPT2_125M, HETERO_W)
+    assert a.feasible and a.latency_s <= sla
+
+
+def test_pgsam_v2_energy_model_with_safety_monitor():
+    """Safety integration: a hot device (from the monitor's RC thermal state)
+    makes v2-costed plans steer energy accounting through Phi."""
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    # drive the GPU hot via sustained modeled power
+    for _ in range(100):
+        sm.thermal_step({"nvidia-rtx-pro-5000": 280.0}, 1.0)
+    orch = PGSAMOrchestrator(EDGE_PLATFORM, UNCONSTRAINED,
+                             config=PGSAMConfig(seed=0, iters_max=400),
+                             energy_model="v2", safety=sm)
+    a = orch.assign(GPT2_125M, HETERO_W)
+    assert a.mapping and np.isfinite(a.energy_j)
+
+
+def test_pareto_orchestrator_accepts_pgsam_engine():
+    import functools
+    engine = functools.partial(PGSAMOrchestrator,
+                               config=PGSAMConfig(seed=0, iters_max=300))
+    po = ParetoOrchestrator(EDGE_PLATFORM, engine=engine)
+    front = po.frontier(GPT2_125M, HETERO_W, sample_budgets=(20,),
+                        n_latency_points=4)
+    assert front
+
+
+def test_pgsam_coverage_min_parity_with_greedy():
+    """Drop-in contract: PGSAM flags coverage-SLA violations like greedy."""
+    c = Constraints(latency_budget_factor=None, coverage_min=0.999)
+    w = Workload(batch=1, prompt_tokens=32, decode_tokens=32, samples=1)
+    g = GreedyOrchestrator([EDGE_NPU, EDGE_GPU_NVIDIA], c).assign(TINY, w)
+    p = PGSAMOrchestrator([EDGE_NPU, EDGE_GPU_NVIDIA], c,
+                          config=PGSAMConfig(seed=0, iters_max=200)).assign(
+                              TINY, w)
+    assert not g.feasible and not p.feasible
+    assert any("coverage" in v for v in p.violations)

@@ -77,3 +77,54 @@ def test_adaptive_sample_budget_monotone():
     assert s_hard >= s_easy
     assert adaptive_sample_budget(124, 256, 0.9) >= \
         adaptive_sample_budget(124, 256, 0.5)
+
+
+def test_csvet_early_stop_skips_after_first_pass():
+    """CSVET: once a verified pass is found, remaining exact checks cannot
+    change the any-pass outcome and are skipped (recorded in stats)."""
+    calls = []
+
+    def verify(s):
+        calls.append(int(s[0]))
+        return bool(s[0] == 1)
+
+    casc = VerifierCascade(verify, logprob_quantile=0.0, early_stop=True)
+    # all survive the cheap screen; best-logprob sample passes exactly
+    samples = [np.array([0]), np.array([1]), np.array([0]), np.array([0])]
+    flags = casc.verify(samples, logprobs=[-5.0, -0.1, -3.0, -9.0])
+    assert flags[1] is True
+    assert calls == [1], "descending-score order finds the pass first"
+    assert casc.stats.skipped == 3
+    assert casc.stats.exact_checked == 1
+
+
+def test_csvet_early_stop_preserves_pass_at_k_outcome():
+    """any(flags) with early stopping == any(flags) without, on random data."""
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n = int(rng.integers(2, 12))
+        truth = rng.random(n) < 0.3
+        samples = [np.array([int(t)]) for t in truth]
+        lps = rng.normal(size=n).tolist()
+        full = VerifierCascade(lambda s: bool(s[0]), logprob_quantile=0.3)
+        fast = VerifierCascade(lambda s: bool(s[0]), logprob_quantile=0.3,
+                               early_stop=True)
+        f_full = full.verify(samples, lps)
+        f_fast = fast.verify(samples, lps)
+        assert any(f_full) == any(f_fast)
+        assert fast.stats.exact_checked + fast.stats.skipped == \
+            full.stats.exact_checked
+
+
+def test_csvet_no_early_stop_keeps_original_behavior():
+    calls = []
+
+    def verify(s):
+        calls.append(int(s[0]))
+        return bool(s[0] == 1)
+
+    casc = VerifierCascade(verify, logprob_quantile=0.0)
+    samples = [np.array([1]), np.array([1]), np.array([1])]
+    casc.verify(samples, logprobs=[-1.0, -2.0, -3.0])
+    assert calls == [1, 1, 1]
+    assert casc.stats.skipped == 0
