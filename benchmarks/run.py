@@ -35,6 +35,7 @@ BENCHES = [
     ("kernel_bench", "benchmarks.kernel_bench", "flash_attention_us"),
     ("pgsam_compare", "benchmarks.pgsam_compare",
      "all_within_5pct_of_oracle"),
+    ("pareto_router", "benchmarks.pareto_router", "acceptance_all"),
 ]
 
 

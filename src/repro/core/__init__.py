@@ -31,7 +31,7 @@ from repro.core.orchestrator import (Assignment, Constraints,
                                      GreedyOrchestrator, ParetoOrchestrator,
                                      exhaustive_oracle)
 from repro.core.pareto import dominates, hypervolume_2d, pareto_front
-from repro.core.safety import (FaultEvent, Health, HealthMonitor,
+from repro.core.safety import (DriftEvent, FaultEvent, Health, HealthMonitor,
                                InputValidator, OutputSanitizer, SafetyMonitor,
                                ThermalModel, THETA_THROTTLE)
 from repro.core.sampling import (CascadeStats, PassAtKResult, VerifierCascade,

@@ -85,6 +85,15 @@ class PlanCosts:
             out[e.device.name] = out.get(e.device.name, 0.0) + e.time_s
         return out
 
+    def per_device_energy(self) -> Dict[str, float]:
+        """Stage (dynamic) energy summed per device, transfer excluded —
+        divides by makespan to give the per-device average power draw the
+        runtime control loop feeds the RC thermal models."""
+        out: Dict[str, float] = {}
+        for e in self.executions:
+            out[e.device.name] = out.get(e.device.name, 0.0) + e.energy_j
+        return out
+
     @property
     def makespan_s(self) -> float:
         """Pipeline view: devices work concurrently; the busiest device plus

@@ -255,6 +255,14 @@ class GreedyOrchestrator:
         healthy = [d.name for d in self.devices if d.name not in failed]
         return self.assign(cfg, workload, healthy=healthy)
 
+    # -- drift-event hook (`repro.core.safety.DriftEvent`): part of the
+    # orchestrator engine contract so `SafetyMonitor.subscribe(orch.on_drift)`
+    # works with any engine. Greedy keeps no cross-assign state, so there is
+    # nothing to invalidate; PGSAMOrchestrator overrides this to bump its
+    # frontier-cache epoch.
+    def on_drift(self, event) -> None:
+        return None
+
 
 def cfg_param_millions(cfg: ArchConfig) -> float:
     from repro.models.model import Model

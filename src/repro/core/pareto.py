@@ -8,10 +8,18 @@ from typing import List, Sequence, Tuple
 
 
 def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
-    """a dominates b: <= in every objective, < in at least one."""
-    le = all(x <= y for x, y in zip(a, b))
-    lt = any(x < y for x, y in zip(a, b))
-    return le and lt
+    """a dominates b: <= in every objective, < in at least one.
+
+    Single-pass with early exit — this sits on the annealer's per-candidate
+    archive path, so generator-pair elegance costs real wall-clock.
+    """
+    lt = False
+    for x, y in zip(a, b):
+        if x > y:
+            return False
+        if x < y:
+            lt = True
+    return lt
 
 
 def pareto_front(points: Sequence[Sequence[float]]) -> List[int]:
@@ -28,9 +36,20 @@ def pareto_front(points: Sequence[Sequence[float]]) -> List[int]:
 def hypervolume_2d(points: Sequence[Tuple[float, float]],
                    ref: Tuple[float, float]) -> float:
     """2-D hypervolume (minimization) w.r.t. reference point — the scalar
-    'did the frontier move' metric used in EXPERIMENTS.md §Perf."""
-    front = sorted({tuple(points[i]) for i in pareto_front(points)
-                    if points[i][0] < ref[0] and points[i][1] < ref[1]})
+    'did the frontier move' metric used in EXPERIMENTS.md §Perf.
+
+    The 2-D non-dominated subset falls out of one sort + sweep (ascending x,
+    keep strictly-improving y) in O(n log n) — PGSAM calls this on every
+    convergence check, where the generic O(n^2) `pareto_front` dominated the
+    anneal's profile.
+    """
+    pts = sorted({(x, y) for x, y in points if x < ref[0] and y < ref[1]})
+    front = []
+    best_y = float("inf")
+    for x, y in pts:
+        if y < best_y:
+            front.append((x, y))
+            best_y = y
     hv = 0.0
     for i, (x, y) in enumerate(front):
         next_x = front[i + 1][0] if i + 1 < len(front) else ref[0]

@@ -16,7 +16,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +67,30 @@ class ThermalModel:
         return self.state
 
 
+# ==================================================== drift events (runtime)
+
+@dataclass(frozen=True)
+class DriftEvent:
+    """A signal-drift notification: the world the current plan was annealed
+    for no longer matches reality. Consumed by `repro.qeil2.runtime`'s
+    control loop (re-anneal) and by `PGSAMOrchestrator.on_drift` (frontier
+    cache invalidation); emitted by `SafetyMonitor`.
+
+    kinds:
+      * ``thermal_margin``   — junction temp crossed theta*T_max (rising
+        edge): Phi has decayed below the proactive-throttle yield.
+      * ``device_failed``    — health monitor marked the device FAILED.
+      * ``device_recovered`` — device reintroduced at reduced capacity.
+      * ``cpq_saturation``   — resident working set approaching the
+        allocator headroom (emitted by the control loop, not the monitor).
+    """
+    t_s: float
+    device: str
+    kind: str
+    value: float = 0.0          # temp degC / capacity fraction, kind-specific
+    detail: str = ""
+
+
 # ====================================================== fault tolerance (6.2)
 
 @dataclass
@@ -106,6 +130,9 @@ class HealthMonitor:
         self._errors: Dict[str, List[bool]] = {d.name: [] for d in devices}
         self.window = window
         self.records: List[RecoveryRecord] = []
+        # optional (device, kind) callback — SafetyMonitor wires this to its
+        # drift-event bus so orchestrators learn about failures/recoveries.
+        self.on_event: Optional[Callable[[str, str], None]] = None
 
     def healthy_devices(self) -> List[str]:
         return [n for n, h in self.health.items() if h != Health.FAILED]
@@ -137,6 +164,8 @@ class HealthMonitor:
             return
         self.health[device] = Health.FAILED
         self.capacity[device] = 0.0
+        if self.on_event is not None:
+            self.on_event(device, "device_failed")
 
     def fail_device(self, device: str, now_s: float,
                     inflight_queries: int = 0,
@@ -159,6 +188,8 @@ class HealthMonitor:
         """Driver reset + memory clear, reintroduce at 50% capacity."""
         self.health[device] = Health.DEGRADED
         self.capacity[device] = REINTRODUCE_CAPACITY
+        if self.on_event is not None:
+            self.on_event(device, "device_recovered")
 
     def promote_if_stable(self, device: str, clean_inferences: int) -> None:
         if clean_inferences >= self.window and \
@@ -256,11 +287,42 @@ class SafetyMonitor:
         self.validator = InputValidator(max_seq_len, vocab_size)
         self.resource_time_factor = 5.0     # tau_max = 5x expected
         self.resource_mem_factor = 1.5      # M_max = 1.5x expected
+        # --- drift-event bus: subscribers get every DriftEvent ---
+        self._subscribers: List[Callable[[DriftEvent], None]] = []
+        self._above_margin: Dict[str, bool] = {d.name: False for d in devices}
+        self.clock_s = 0.0                  # advanced by thermal_step
+        self.health.on_event = lambda dev, kind: self.emit(
+            DriftEvent(self.clock_s, dev, kind))
+
+    def subscribe(self, fn: Callable[[DriftEvent], None]) -> None:
+        """Register a drift-event consumer (e.g. the runtime control loop or
+        `PGSAMOrchestrator.on_drift`)."""
+        self._subscribers.append(fn)
+
+    def emit(self, event: DriftEvent) -> None:
+        for fn in self._subscribers:
+            fn(event)
 
     def thermal_step(self, powers: Dict[str, float], dt_s: float
                      ) -> Dict[str, float]:
-        return {name: self.thermal[name].step(powers.get(name, 0.0), dt_s).throttle
-                for name in self.thermal}
+        """Advance every RC thermal model; emits a ``thermal_margin``
+        DriftEvent on the rising edge of T crossing theta*T_max (the same
+        threshold that arms the proactive throttle — equivalently, Phi
+        dropping below its proactive-yield floor)."""
+        self.clock_s += dt_s
+        out = {}
+        for name, tm in self.thermal.items():
+            st = tm.step(powers.get(name, 0.0), dt_s)
+            out[name] = st.throttle
+            above = st.temp_c > THETA_THROTTLE * tm.device.t_max
+            if above and not self._above_margin[name]:
+                self.emit(DriftEvent(self.clock_s, name, "thermal_margin",
+                                     value=st.temp_c,
+                                     detail=f"T {st.temp_c:.1f} degC > "
+                                            f"{THETA_THROTTLE:.2f} * "
+                                            f"{tm.device.t_max:.0f}"))
+            self._above_margin[name] = above
+        return out
 
     def throttle_factors(self) -> Dict[str, float]:
         return {n: tm.state.throttle for n, tm in self.thermal.items()}

@@ -3,6 +3,11 @@ orchestration + safety monitoring in the loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-3b-a800m \
       --smoke --requests 8 --samples 4
+
+``--router`` replaces the one-shot greedy plan with the Pareto-routed
+runtime: a PGSAM anneal builds the non-dominated archive once, and each
+``generate`` call is placed at the operating point its SLA tier scalarizes
+out of the archive (`repro.qeil2.runtime`).
 """
 from __future__ import annotations
 
@@ -28,6 +33,12 @@ def main() -> None:
     ap.add_argument("--samples", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--router", action="store_true",
+                    help="frontier-driven placement per request tier "
+                         "(PGSAM archive + SLA router)")
+    ap.add_argument("--tier", default="standard",
+                    choices=["interactive", "standard", "economy"],
+                    help="SLA tier to serve this batch under (--router)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,9 +50,34 @@ def main() -> None:
     # --- QEIL plan for this workload (simulated edge platform profile)
     w = Workload(batch=args.requests, prompt_tokens=args.prompt_len,
                  decode_tokens=args.max_new, samples=args.samples)
-    orch = GreedyOrchestrator(EDGE_PLATFORM,
-                              Constraints(latency_budget_factor=1.0))
-    plan = orch.assign(cfg, w)
+    router = None
+    if args.router:
+        from repro.qeil2 import (PGSAMConfig, PGSAMOrchestrator, ParetoRouter,
+                                 default_tiers)
+        orch = PGSAMOrchestrator(
+            EDGE_PLATFORM, Constraints(latency_budget_factor=None),
+            config=PGSAMConfig(seed=0, incremental=True))
+        frontier = orch.pareto_frontier(cfg, w)
+        placed = [a for a in frontier if a.mapping]
+        if not placed:
+            # nothing fits the platform: degrade to the same infeasible-plan
+            # report the non-router path gives instead of crashing
+            print(f"[router] no placeable operating point: "
+                  f"{'; '.join(frontier[0].violations)}")
+            router, plan = None, frontier[0]
+        else:
+            base = min(a.latency_s for a in placed) / 0.9
+            router = ParetoRouter(orch, cfg, w, tiers=default_tiers(base))
+            print(f"[router] archive {len(placed)} operating points")
+            for name, d in sorted(router.route_all().items()):
+                print(f"[router] tier {name:12s} -> point {d.point_index:2d} "
+                      f"E={d.energy_j:.2f} J T={d.latency_s * 1e3:.1f} ms "
+                      f"P={d.avg_power_w:.1f} W caps_met={d.meets_caps}")
+            plan = router.route(args.tier).assignment
+    else:
+        orch = GreedyOrchestrator(EDGE_PLATFORM,
+                                  Constraints(latency_budget_factor=1.0))
+        plan = orch.assign(cfg, w)
     print(f"[orchestrator] devices={plan.device_names()} "
           f"energy={plan.energy_j:.2f} J latency={plan.latency_s * 1e3:.1f} ms "
           f"feasible={plan.feasible}")
@@ -73,7 +109,17 @@ def main() -> None:
 
     engine = ServingEngine(model, params, max_new_tokens=args.max_new)
     t0 = time.perf_counter()
-    results = engine.generate(prompts, n_samples=args.samples, extras=extras)
+    if router is not None:
+        from repro.qeil2 import RoutedServingEngine
+        routed = RoutedServingEngine(engine, router, default_tier=args.tier)
+        results = routed.generate(prompts, n_samples=args.samples,
+                                  extras=extras)
+        d = routed.decisions[-1]
+        print(f"[router] generate placed at point {d.point_index} "
+              f"({d.tier.name}): {d.assignment.device_names()}")
+    else:
+        results = engine.generate(prompts, n_samples=args.samples,
+                                  extras=extras)
     dt = time.perf_counter() - t0
     n_tok = sum(r.decode_tokens for r in results)
     print(f"[serve] {len(results)} requests x {args.samples} samples, "

@@ -3,6 +3,8 @@
 signals   — DASI / CPQ / Phi runtime device-workload signals
 energy_v2 — unified energy equation modulated by the signal triple
 pgsam     — Pareto-Guided Simulated Annealing with Momentum + orchestrator
+runtime   — Pareto-routed serving runtime (SLA router, control loop,
+            incremental delta-cost evaluation)
 """
 from repro.qeil2.signals import (SignalSet, cpq, cpq_power_factor, dasi,
                                  memory_saturation, phi, signals_for)
@@ -10,3 +12,6 @@ from repro.qeil2.energy_v2 import (StageExecutionV2, execute_stage_v2,
                                    plan_costs_v2, W_COMPUTE, W_MEMORY)
 from repro.qeil2.pgsam import (ArchiveEntry, PGSAM, PGSAMConfig,
                                PGSAMOrchestrator, PGSAMResult)
+from repro.qeil2.runtime import (ControlLoop, DeltaEvaluator, LoopConfig,
+                                 ParetoRouter, RoutedServingEngine,
+                                 RoutingDecision, SLATier, default_tiers)

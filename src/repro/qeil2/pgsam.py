@@ -29,14 +29,14 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.decomposition import Stage, Workload, decompose
 from repro.core.devices import DeviceProfile
-from repro.core.energy import PlanCosts, plan_costs
+from repro.core.energy import PlanCosts, execute_stage, plan_costs
 from repro.core.orchestrator import (Assignment, Constraints,
                                      GreedyOrchestrator,
                                      constraint_violations, greedy_sla_sweep,
@@ -67,13 +67,22 @@ class PGSAMConfig:
     hv_patience: int = 400
     hv_check_every: int = 25
     hv_tol: float = 1e-4
+    # delta-cost evaluation (repro.qeil2.runtime.incremental): every proposal
+    # is a single-stage move, so candidate objectives come from O(1)
+    # accumulator updates instead of a full O(stages) plan_costs pass. The
+    # objective values agree with the full path to ~1e-9 relative (float
+    # summation order), so the walk may differ in the last ulp; archive
+    # entries get exact full-path costs filled in after the anneal.
+    incremental: bool = False
 
 
 @dataclass
 class ArchiveEntry:
     objectives: Tuple[float, float, float]   # energy_j, makespan_s, underutil
     mapping: Mapping
-    costs: PlanCosts
+    # None only transiently inside an incremental anneal; `optimize` fills
+    # every returned entry with full-path costs before returning.
+    costs: Optional[PlanCosts]
 
 
 @dataclass
@@ -159,8 +168,11 @@ class PGSAM:
         return True
 
     # ------------------------------------------------------------ proposal
-    def _propose(self, mapping: Mapping,
-                 momentum_devs: deque) -> Optional[Mapping]:
+    def _propose(self, mapping: Mapping, momentum_devs: deque
+                 ) -> Optional[Tuple[Mapping, int, int]]:
+        """One single-stage move: returns (new mapping, stage, target device).
+        The explicit (stage, device) pair is what lets the incremental
+        evaluator apply the move in O(1)."""
         n_stage, n_dev = len(mapping), len(self.devices)
         if n_dev < 2:
             return None
@@ -177,14 +189,14 @@ class PGSAM:
                 si = int(cands[int(self.rng.integers(len(cands)))])
                 new = list(mapping)
                 new[si] = di
-                return tuple(new)
+                return tuple(new), si, di
         si = int(self.rng.integers(n_stage))
         di = int(self.rng.integers(n_dev - 1))
         if di >= mapping[si]:
             di += 1
         new = list(mapping)
         new[si] = di
-        return tuple(new)
+        return tuple(new), si, di
 
     # ---------------------------------------------------------------- run
     def optimize(self, seeds: Sequence[Mapping]) -> PGSAMResult:
@@ -216,25 +228,46 @@ class PGSAM:
         momentum_devs: deque = deque(maxlen=self.cfg.momentum_window)
         accepted = 0
         it = 0
+
+        # delta-cost evaluation: mirror `current` in an incremental evaluator;
+        # proposals are applied speculatively and reverted on rejection.
+        evalr = None
+        if self.cfg.incremental:
+            from repro.qeil2.runtime.incremental import DeltaEvaluator
+            evalr = DeltaEvaluator(self.stages, self.devices, current.mapping,
+                                   self.quant, self.workload,
+                                   model=self.energy_model, temps=self.temps,
+                                   headroom=self.headroom)
+
         for it in range(1, self.cfg.iters_max + 1):
-            cand_map = self._propose(current.mapping, momentum_devs)
-            if cand_map is None:
+            prop = self._propose(current.mapping, momentum_devs)
+            if prop is None:
                 break
-            if self._mem_ok(cand_map):
-                cand = self._evaluate(cand_map)
+            cand_map, si, di = prop
+            if evalr is not None:
+                # O(1) destination check: the source device only frees memory,
+                # so feasibility of a single move is the destination's alone.
+                mem_ok = evalr.move_fits(si, di, self._caps[di])
+            else:
+                mem_ok = self._mem_ok(cand_map)
+            if mem_ok:
+                if evalr is not None:
+                    token = evalr.apply(si, di)
+                    cand = ArchiveEntry(evalr.objectives(), cand_map, None)
+                else:
+                    token = None
+                    cand = self._evaluate(cand_map)
                 if best_key(cand) < best_key(best):
                     best = cand
                 accept = self._accept(current, cand, archive, temp)
                 if accept:
                     # record the accepted direction (the device that gained a
                     # stage) for momentum-biased proposals.
-                    diff = [si for si, (a, b) in
-                            enumerate(zip(current.mapping, cand.mapping))
-                            if a != b]
-                    if diff:
-                        momentum_devs.append(cand.mapping[diff[0]])
+                    momentum_devs.append(di)
                     current = cand
                     accepted += 1
+                elif evalr is not None:
+                    evalr.revert(token)
             temp *= self.cfg.cooling
             if it % self.cfg.hv_check_every == 0:
                 new_hv = hypervolume_2d([(a.objectives[0], a.objectives[1])
@@ -247,6 +280,20 @@ class PGSAM:
 
         hv = hypervolume_2d([(a.objectives[0], a.objectives[1])
                              for a in archive], ref)
+        # incremental entries carry delta-evaluated objectives and no costs:
+        # fill in the exact full-path PlanCosts for everything we return
+        # (if best sits in the archive it is the same object and is covered
+        # by the first loop).
+        if evalr is not None:
+            for entry in archive:
+                if entry.costs is None:
+                    full = self._evaluate(entry.mapping)
+                    entry.costs = full.costs
+                    entry.objectives = full.objectives
+            if best.costs is None:
+                full = self._evaluate(best.mapping)
+                best.costs = full.costs
+                best.objectives = full.objectives
         archive.sort(key=lambda a: a.objectives)
         return PGSAMResult(archive, best, it, accepted, hv, ref)
 
@@ -299,6 +346,13 @@ class PGSAMOrchestrator:
         # Phi (v2 energy) and its health view feeds reassign_on_failure.
         self.safety = safety
         self.last_result: Optional[PGSAMResult] = None
+        # frontier archive cache: `pareto_frontier` memoizes per (cfg,
+        # workload, healthy-set, health epoch). The epoch is the invalidation
+        # handle — drift events (thermal margin crossings, failures, CPQ
+        # saturation) bump it via `on_drift` / `invalidate_frontier`, so a
+        # stale frontier is never served after the world has moved.
+        self.health_epoch = 0
+        self._frontier_cache: Dict[tuple, List[Assignment]] = {}
 
     # -- seeds: greedy at several latency budgets spans the frontier
     def _greedy_seeds(self, cfg: ArchConfig, workload: Workload,
@@ -385,16 +439,29 @@ class PGSAMOrchestrator:
         return Assignment(mapping, best.costs, not violations, violations,
                           notes)
 
-    def pareto_frontier(self, cfg: ArchConfig, workload: Workload,
-                        healthy: Optional[Sequence[str]] = None
-                        ) -> List[Assignment]:
-        """Full non-dominated archive of one anneal, as Assignments sorted by
-        energy — the multi-objective counterpart of
-        `ParetoOrchestrator.frontier` from a single optimization run."""
-        try:
-            stages, devices, result = self._anneal(cfg, workload, healthy)
-        except _Infeasible as e:
-            return [Assignment({}, None, False, e.violations)]
+    # ---------------------------------------------------- frontier caching
+    def _frontier_key(self, cfg: ArchConfig, workload: Workload,
+                      healthy: Optional[Sequence[str]]) -> tuple:
+        return (cfg.name, repr(cfg), workload,
+                tuple(sorted(healthy)) if healthy is not None else None,
+                self.quant, self.energy_model, self.health_epoch)
+
+    def invalidate_frontier(self) -> None:
+        """Bump the device-health epoch and drop every cached archive. Called
+        by the runtime control loop when signals drift (and usable directly
+        after out-of-band device/thermal changes)."""
+        self.health_epoch += 1
+        self._frontier_cache.clear()
+
+    def on_drift(self, event) -> None:
+        """`repro.core.safety.SafetyMonitor.subscribe` target: any drift
+        event invalidates the cached frontier (the archive was annealed
+        against the pre-drift temperatures / health set)."""
+        self.invalidate_frontier()
+
+    def _materialize(self, stages: List[Stage],
+                     devices: List[DeviceProfile], result: PGSAMResult,
+                     cfg: ArchConfig, workload: Workload) -> List[Assignment]:
         out = []
         for entry in result.archive:
             mapping = {st.name: devices[di]
@@ -409,6 +476,117 @@ class PGSAMOrchestrator:
                                   notes=[f"underutil "
                                          f"{entry.objectives[2]:.3f}"]))
         return out
+
+    def pareto_frontier(self, cfg: ArchConfig, workload: Workload,
+                        healthy: Optional[Sequence[str]] = None
+                        ) -> List[Assignment]:
+        """Full non-dominated archive of one anneal, as Assignments sorted by
+        energy — the multi-objective counterpart of
+        `ParetoOrchestrator.frontier` from a single optimization run.
+
+        Memoized on (cfg, workload, healthy, health_epoch): repeated routing
+        queries against an unchanged world reuse the archive instead of
+        re-annealing; `invalidate_frontier` (or any drift event delivered to
+        `on_drift`) forces the next call to anneal fresh."""
+        key = self._frontier_key(cfg, workload, healthy)
+        hit = self._frontier_cache.get(key)
+        if hit is not None:
+            return hit
+        try:
+            stages, devices, result = self._anneal(cfg, workload, healthy)
+        except _Infeasible as e:
+            return [Assignment({}, None, False, e.violations)]
+        out = self._materialize(stages, devices, result, cfg, workload)
+        self._frontier_cache[key] = out
+        return out
+
+    # ------------------------------------------------- online re-annealing
+    def _patch_mapping(self, mapping: Dict[str, DeviceProfile],
+                       stages: List[Stage], devices: List[DeviceProfile],
+                       caps: List[float]) -> Optional[Mapping]:
+        """Repair a warm-start mapping for the current device subset: stages
+        stranded on excluded devices (failed / cooling) move to the fitting
+        device with the cheapest per-stage energy. Returns None when the
+        mapping cannot be made memory-feasible."""
+        dev_idx = {d.name: i for i, d in enumerate(devices)}
+        used = [0.0] * len(devices)
+        out: List[int] = []
+        for st in stages:
+            dev = mapping.get(st.name)
+            di = dev_idx.get(dev.name) if dev is not None else None
+            if di is not None and used[di] + st.param_bytes <= caps[di]:
+                used[di] += st.param_bytes
+                out.append(di)
+                continue
+            cands = [(execute_stage(st, devices[j], self.quant).energy_j, j)
+                     for j in range(len(devices))
+                     if used[j] + st.param_bytes <= caps[j]]
+            if not cands:
+                return None
+            _, di = min(cands)
+            used[di] += st.param_bytes
+            out.append(di)
+        return tuple(out)
+
+    def reanneal(self, cfg: ArchConfig, workload: Workload,
+                 warm_starts: Sequence[Dict[str, DeviceProfile]],
+                 healthy: Optional[Sequence[str]] = None,
+                 iters_max: Optional[int] = None) -> Assignment:
+        """Bounded online re-anneal, warm-started from previously-annealed
+        mappings (the current assignment plus the archive) instead of greedy
+        seeds — the control loop's fast path after a drift event.
+
+        Mappings that reference excluded devices are repaired stage-by-stage;
+        ``iters_max`` bounds the walk (default: the configured budget). The
+        refreshed archive replaces the cached frontier for this (cfg,
+        workload, healthy) at the *current* epoch, so routers pick it up
+        without a second anneal."""
+        stages = decompose(cfg, workload)
+        devices = [d for d in self.devices
+                   if healthy is None or d.name in healthy]
+        if not devices:
+            raise RuntimeError("no healthy devices")
+        caps = [d.mem_cap * self.constraints.memory_headroom for d in devices]
+        seeds = []
+        for m in warm_starts:
+            s = self._patch_mapping(m, stages, devices, caps)
+            if s is not None:
+                seeds.append(s)
+        seeds = list(dict.fromkeys(seeds))
+        if not seeds:
+            # nothing survives the device change: fall back to greedy seeding
+            return self.assign(cfg, workload, healthy=healthy)
+        cfg_sam = self.config if iters_max is None else \
+            replace(self.config, iters_max=iters_max)
+        temps = None
+        if self.safety is not None and self.energy_model == "v2":
+            temps = {n: tm.state.temp_c
+                     for n, tm in self.safety.thermal.items()}
+        sam = PGSAM(stages, devices, self.quant, workload,
+                    config=cfg_sam,
+                    memory_headroom=self.constraints.memory_headroom,
+                    energy_model=self.energy_model, temps=temps,
+                    latency_budget_s=latency_budget(
+                        self.constraints, stages, devices, self.quant))
+        result = sam.optimize(seeds)
+        self.last_result = result
+        # the world changed enough to warrant a re-anneal, so any archive a
+        # router pulled earlier is stale: bump the epoch first, then publish
+        # the refreshed archive at the new epoch (routers key on the epoch,
+        # not on cache object identity)
+        self.invalidate_frontier()
+        key = self._frontier_key(cfg, workload, healthy)
+        self._frontier_cache[key] = self._materialize(
+            stages, devices, result, cfg, workload)
+        best = result.best_energy
+        mapping = {st.name: devices[di]
+                   for st, di in zip(stages, best.mapping)}
+        violations = constraint_violations(self.constraints,
+                                           best.objectives[1], cfg, workload)
+        notes = [f"reanneal: {result.iterations} iters, "
+                 f"{len(seeds)} warm seeds, archive {len(result.archive)}"]
+        return Assignment(mapping, best.costs, not violations, violations,
+                          notes)
 
     def reassign_on_failure(self, cfg: ArchConfig, workload: Workload,
                             failed: Sequence[str]) -> Assignment:

@@ -1,0 +1,232 @@
+"""SLA-tiered operating-point routing over the PGSAM non-dominated archive.
+
+PR 1 left the Pareto frontier a one-shot artifact: `PGSAMOrchestrator`
+computes it, callers print it. This module makes it a *live routing surface*:
+every request class (SLA tier) is scalarized over the archive to pick the
+operating point — a full stage->device placement with known energy, makespan
+and quality — that serves that tier cheapest within its caps.
+
+* ``SLATier`` — a request class: optional hard caps (`latency_p99_s` on the
+  plan makespan, `energy_cap_w` on its average power draw, `min_quality` on
+  repeated-sampling coverage) plus scalarization weights for choosing among
+  the cap-feasible archive points.
+* ``ParetoRouter`` — holds the frontier (via the orchestrator's memoized
+  `pareto_frontier`, so repeated routing never re-anneals an unchanged
+  world) and maps tiers to `RoutingDecision`s. Tracks the orchestrator's
+  health epoch: after a drift event invalidates the archive, the next
+  `route` call transparently refreshes.
+* ``RoutedServingEngine`` — the `repro.serving.ServingEngine` adapter:
+  placement becomes frontier-driven per `generate` call (the engine's
+  `placement_provider` hook observes the chosen operating point), and a
+  tier's `min_quality` floor can raise the sampling budget.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Union
+
+from repro.core.decomposition import Workload
+from repro.core.formalisms import coverage, samples_for_coverage
+from repro.core.orchestrator import Assignment, cfg_param_millions
+from repro.models.config import ArchConfig
+
+
+@dataclass(frozen=True)
+class SLATier:
+    """One request class. Caps are hard constraints on the operating point;
+    weights scalarize among the points that satisfy them (objectives are
+    normalized by the frontier minima, so the weights are unitless)."""
+    name: str
+    latency_p99_s: Optional[float] = None   # cap on plan makespan
+    energy_cap_w: Optional[float] = None    # cap on plan average power
+    min_quality: Optional[float] = None     # coverage floor (Formalism 1.1)
+    energy_weight: float = 1.0
+    latency_weight: float = 0.0
+
+
+@dataclass
+class RoutingDecision:
+    tier: SLATier
+    assignment: Assignment          # the chosen archive operating point
+    point_index: int                # index into the router's frontier
+    meets_caps: bool                # False -> best-effort (caps violated)
+    quality: Optional[float] = None     # coverage at the workload's samples
+    samples: Optional[int] = None       # raised budget to reach min_quality
+    notes: List[str] = field(default_factory=list)
+
+    @property
+    def energy_j(self) -> float:
+        return self.assignment.energy_j
+
+    @property
+    def latency_s(self) -> float:
+        return self.assignment.latency_s
+
+    @property
+    def avg_power_w(self) -> float:
+        return self.energy_j / max(self.latency_s, 1e-12)
+
+
+def default_tiers(base_latency_s: float) -> List[SLATier]:
+    """Three canonical tiers around a reference latency (typically the
+    balanced plan's makespan): interactive chases the low-latency end of the
+    frontier, economy the low-energy end, standard trades both under a
+    relaxed cap."""
+    return [
+        SLATier("interactive", latency_p99_s=0.9 * base_latency_s,
+                energy_weight=0.0, latency_weight=1.0),
+        SLATier("standard", latency_p99_s=1.5 * base_latency_s,
+                energy_weight=0.5, latency_weight=0.5),
+        SLATier("economy", energy_weight=1.0, latency_weight=0.0),
+    ]
+
+
+class ParetoRouter:
+    """Maps SLA tiers to operating points on the PGSAM archive.
+
+    ``orchestrator`` must expose ``pareto_frontier(cfg, workload, healthy)``
+    and a ``health_epoch`` counter (`repro.qeil2.PGSAMOrchestrator`); the
+    router re-pulls the frontier whenever the epoch moved — i.e. after any
+    drift event the control loop (or safety monitor) delivered.
+    """
+
+    def __init__(self, orchestrator, cfg: ArchConfig, workload: Workload,
+                 tiers: Sequence[SLATier] = (),
+                 healthy: Optional[Sequence[str]] = None):
+        self.orchestrator = orchestrator
+        self.cfg = cfg
+        self.workload = workload
+        self.tiers: Dict[str, SLATier] = {t.name: t for t in tiers}
+        self.healthy = list(healthy) if healthy is not None else None
+        self._frontier: Optional[List[Assignment]] = None
+        self._epoch = -1
+
+    def add_tier(self, tier: SLATier) -> None:
+        self.tiers[tier.name] = tier
+
+    def set_healthy(self, healthy: Optional[Sequence[str]]) -> None:
+        """Restrict routing to a device subset (the control loop calls this
+        when devices fail, cool down, or come back)."""
+        self.healthy = list(healthy) if healthy is not None else None
+        self._frontier = None
+
+    @property
+    def frontier(self) -> List[Assignment]:
+        """The current archive (placed points only), refreshed when the
+        orchestrator's health epoch has moved since the last pull."""
+        epoch = getattr(self.orchestrator, "health_epoch", 0)
+        if self._frontier is None or epoch != self._epoch:
+            pts = self.orchestrator.pareto_frontier(
+                self.cfg, self.workload, healthy=self.healthy)
+            self._frontier = [a for a in pts if a.mapping]
+            self._epoch = epoch
+        return self._frontier
+
+    # ------------------------------------------------------------- routing
+    def route(self, request_class: Union[str, SLATier]) -> RoutingDecision:
+        """Pick the operating point for a request class: hard-filter the
+        archive by the tier's caps, then scalarize (weights over frontier-
+        normalized energy/latency). With no cap-feasible point the least-
+        violating point is returned flagged ``meets_caps=False`` — serving
+        degrades, it does not crash."""
+        tier = (self.tiers[request_class]
+                if isinstance(request_class, str) else request_class)
+        pts = self.frontier
+        if not pts:
+            raise RuntimeError("empty frontier: no placeable operating point")
+        e_min = max(min(a.energy_j for a in pts), 1e-12)
+        t_min = max(min(a.latency_s for a in pts), 1e-12)
+
+        def score(a: Assignment) -> float:
+            return (tier.energy_weight * a.energy_j / e_min +
+                    tier.latency_weight * a.latency_s / t_min)
+
+        def violation(a: Assignment) -> float:
+            v = 0.0
+            if tier.latency_p99_s is not None and \
+                    a.latency_s > tier.latency_p99_s:
+                v += a.latency_s / tier.latency_p99_s - 1.0
+            if tier.energy_cap_w is not None:
+                p = a.energy_j / max(a.latency_s, 1e-12)
+                if p > tier.energy_cap_w:
+                    v += p / tier.energy_cap_w - 1.0
+            # sub-ulp overshoot is a rounding artifact, not a violation:
+            # callers routinely derive caps as fractions of frontier points
+            # (cap = x/0.9 * 0.9 can land one ulp under x)
+            return 0.0 if v < 1e-9 else v
+
+        feasible = [i for i, a in enumerate(pts) if violation(a) == 0.0]
+        notes = []
+        if feasible:
+            idx = min(feasible, key=lambda i: (score(pts[i]), i))
+            meets = True
+        else:
+            idx = min(range(len(pts)),
+                      key=lambda i: (violation(pts[i]), score(pts[i]), i))
+            meets = False
+            notes.append(f"no archive point satisfies tier "
+                         f"{tier.name!r} caps; best-effort")
+
+        quality = None
+        samples = None
+        if tier.min_quality is not None:
+            w = self.workload
+            n_millions = cfg_param_millions(self.cfg)
+            quality = coverage(w.samples, n_millions, w.decode_tokens)
+            if quality < tier.min_quality:
+                samples = int(math.ceil(samples_for_coverage(
+                    tier.min_quality, n_millions, w.decode_tokens)))
+                notes.append(f"coverage {quality:.3f} < "
+                             f"{tier.min_quality}: raise samples to "
+                             f"{samples}")
+        return RoutingDecision(tier, pts[idx], idx, meets, quality, samples,
+                               notes)
+
+    def route_all(self) -> Dict[str, RoutingDecision]:
+        return {name: self.route(name) for name in self.tiers}
+
+
+# ======================================================= serving-side adapter
+
+class RoutedServingEngine:
+    """Frontier-driven placement for `repro.serving.ServingEngine`.
+
+    The engine executes on whatever accelerator JAX sees; *placement* in this
+    reproduction is the orchestrator's simulated stage->device plan. This
+    adapter closes the gap the ROADMAP called out: each ``generate`` call
+    routes its SLA tier through the `ParetoRouter`, installs the chosen
+    operating point into the engine's ``placement_provider`` hook, and (when
+    the tier sets ``min_quality``) raises ``n_samples`` to the coverage
+    floor's sampling budget.
+    """
+
+    def __init__(self, engine, router: ParetoRouter,
+                 default_tier: Optional[str] = None):
+        self.engine = engine
+        self.router = router
+        self.default_tier = default_tier
+        # bounded: decisions reference full plans; cap the history so a
+        # long-lived server doesn't grow with request count
+        self.decisions: Deque[RoutingDecision] = deque(maxlen=256)
+        self._current: Optional[RoutingDecision] = None
+        engine.placement_provider = self._placement
+
+    def _placement(self, n_prompts: int, n_samples: int):
+        return self._current.assignment if self._current is not None else None
+
+    def generate(self, prompts, tier: Optional[Union[str, SLATier]] = None,
+                 n_samples: int = 1, **kwargs):
+        """`ServingEngine.generate` with per-call frontier routing; the
+        decision lands in ``self.decisions`` (and the operating point in
+        ``engine.last_placement``)."""
+        tier = tier if tier is not None else self.default_tier
+        if tier is None:
+            raise ValueError("no tier given and no default_tier configured")
+        decision = self.router.route(tier)
+        if decision.samples is not None:
+            n_samples = max(n_samples, decision.samples)
+        self._current = decision
+        self.decisions.append(decision)
+        return self.engine.generate(prompts, n_samples=n_samples, **kwargs)

@@ -13,8 +13,9 @@ it amortizes prefill energy across samples.
 from __future__ import annotations
 
 import functools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,12 +35,27 @@ class GenerationResult:
 
 class ServingEngine:
     def __init__(self, model: Model, params, max_new_tokens: int = 32,
-                 temperature: float = 0.8, eos_token: Optional[int] = None):
+                 temperature: float = 0.8, eos_token: Optional[int] = None,
+                 placement_provider: Optional[Callable] = None):
         self.model = model
         self.params = params
         self.max_new_tokens = max_new_tokens
         self.temperature = temperature
         self.eos_token = eos_token
+        # placement hook: called once per `generate` with (n_prompts,
+        # n_samples) and returns the orchestrator's operating point for the
+        # call (an Assignment, or None). The QEIL split of labor: the
+        # orchestrator decides *where* (simulated stage->device plan), the
+        # engine the *how* — this hook is what lets the plan be chosen
+        # per-call from a live Pareto frontier
+        # (`repro.qeil2.runtime.RoutedServingEngine`) instead of once at
+        # startup. The engine records it; execution itself runs on whatever
+        # accelerator JAX sees.
+        self.placement_provider = placement_provider
+        self.last_placement = None
+        # bounded history: each entry holds a full plan (per-stage costs);
+        # a long-lived server must not grow linearly with request count
+        self.placements: Deque = deque(maxlen=256)
         self._prefill_jit = jax.jit(self._prefill)
         self._decode_jit = jax.jit(self._decode_step)
 
@@ -70,6 +86,11 @@ class ServingEngine:
         temp = temperature if temperature is not None else self.temperature
         rng = rng if rng is not None else jax.random.key(0)
         extras = extras or {}
+
+        if self.placement_provider is not None:
+            self.last_placement = self.placement_provider(len(prompts),
+                                                          n_samples)
+            self.placements.append(self.last_placement)
 
         results: List[Optional[GenerationResult]] = [None] * len(prompts)
         by_len: Dict[int, List[int]] = {}

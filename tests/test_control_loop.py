@@ -1,0 +1,162 @@
+"""ControlLoop: the orchestrate -> execute -> heat -> re-orchestrate cycle.
+Drift events (thermal margin, failure, recovery, CPQ saturation) trigger
+bounded warm-started re-anneals; the adaptive loop finishes hot scenarios
+with zero hardware-throttle events where static placement throttles."""
+import pytest
+
+from repro.configs.paper_models import GPT2_125M
+from repro.core import (Constraints, DriftEvent, SafetyMonitor, Workload,
+                        THETA_THROTTLE)
+from repro.core.devices import EDGE_PLATFORM
+from repro.qeil2 import (ControlLoop, LoopConfig, PGSAMConfig,
+                         PGSAMOrchestrator)
+
+W = Workload(batch=1, prompt_tokens=128, decode_tokens=256, samples=20)
+GPU = "nvidia-rtx-pro-5000"
+SLA = Constraints(latency_sla_s=0.15)
+
+
+def _orch(safety=None, iters=1200):
+    return PGSAMOrchestrator(
+        EDGE_PLATFORM, SLA,
+        config=PGSAMConfig(seed=0, iters_max=iters, incremental=True),
+        energy_model="v2", safety=safety)
+
+
+def _loop(adaptive, safety, dt_s=10.0):
+    return ControlLoop(_orch(safety), safety, GPT2_125M, W,
+                       LoopConfig(dt_s=dt_s, reanneal_iters=300,
+                                  adaptive=adaptive))
+
+
+# ----------------------------------------------------------- drift plumbing
+
+def test_safety_monitor_emits_thermal_margin_on_rising_edge_only():
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    events = []
+    sm.subscribe(events.append)
+    hot = {GPU: 400.0}
+    for _ in range(60):
+        sm.thermal_step(hot, 5.0)
+    margins = [e for e in events if e.kind == "thermal_margin"]
+    assert len(margins) == 1 and margins[0].device == GPU
+    limit = THETA_THROTTLE * sm.thermal[GPU].device.t_max
+    assert margins[0].value > limit
+
+
+def test_safety_monitor_emits_failure_and_recovery():
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    events = []
+    sm.subscribe(events.append)
+    sm.health.fail_device(GPU, now_s=1.0)
+    sm.health.recover_device(GPU)
+    kinds = [e.kind for e in events]
+    assert kinds == ["device_failed", "device_recovered"]
+
+
+# -------------------------------------------------------------- closed loop
+
+def test_adaptive_loop_sheds_hot_device_and_avoids_throttle():
+    """The acceptance contrast in miniature: an exogenous heat ramp on the
+    GPU. The closed loop crosses the margin once, re-anneals the GPU out,
+    finishes with zero hardware-throttle events; the static baseline rides
+    the same ramp into the throttle ceiling."""
+    results = {}
+    for adaptive in (True, False):
+        sm = SafetyMonitor(EDGE_PLATFORM)
+        loop = _loop(adaptive, sm)
+        reannealed = False
+        for i in range(30):
+            r = loop.step(load=1.5, extra_power={GPU: 255.0})
+            reannealed = reannealed or r.reannealed
+        results[adaptive] = (sm.total_throttle_events(), reannealed,
+                            loop.assignment)
+    events_adaptive, reannealed, plan = results[True]
+    events_static, static_reannealed, _ = results[False]
+    assert events_adaptive == 0
+    assert reannealed
+    assert GPU not in plan.device_names()      # work moved off the hot GPU
+    assert events_static >= 1
+    assert not static_reannealed
+
+
+def test_cooled_device_rejoins_placement():
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    loop = _loop(True, sm)
+    for _ in range(20):
+        loop.step(load=1.5, extra_power={GPU: 255.0})
+    assert GPU in loop._excluded
+    kinds = []
+    for _ in range(30):                        # ramp off: device cools
+        r = loop.step(load=1.0)
+        kinds += [e.kind for e in r.drift]
+    assert "device_cooled" in kinds
+    assert GPU not in loop._excluded
+    assert GPU in loop.allowed_devices()
+
+
+def test_failure_triggers_reanneal_off_dead_device():
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    loop = _loop(True, sm)
+    r = loop.step(load=1.0)
+    used = loop.assignment.device_names()
+    victim = used[0]
+    sm.health.fail_device(victim, now_s=loop.t_s)
+    r = loop.step(load=1.0)
+    assert r.reannealed
+    assert victim not in loop.assignment.device_names()
+    # the step that executed the dying plan is lost; the re-annealed plan
+    # serves from the next step on
+    assert not r.served
+    r = loop.step(load=1.0)
+    assert r.served
+    sm.health.recover_device(victim)
+    r = loop.step(load=1.0)
+    assert victim in loop.allowed_devices()
+
+
+def test_static_loop_stops_serving_through_failure():
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    loop = _loop(False, sm)
+    loop.step(load=1.0)
+    victim = loop.assignment.device_names()[0]
+    sm.health.fail_device(victim, now_s=loop.t_s)
+    r = loop.step(load=1.0)
+    assert not r.reannealed
+    assert not r.served and r.inferences == 0.0
+
+
+def test_cpq_saturation_emits_drift():
+    """Shrink a device until the plan's resident set crowds its headroom:
+    the loop flags CPQ saturation (and the orchestrator's epoch moves)."""
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    orch = _orch(sm, iters=400)
+    loop = ControlLoop(orch, sm, GPT2_125M, W,
+                       LoopConfig(dt_s=5.0, cpq_saturation=0.0,
+                                  adaptive=True))
+    r = loop.step(load=1.0)
+    assert any(e.kind == "cpq_saturation" for e in r.drift)
+
+
+def test_reanneal_is_bounded_and_warm_started():
+    sm = SafetyMonitor(EDGE_PLATFORM)
+    orch = _orch(sm)
+    frontier = [a for a in orch.pareto_frontier(GPT2_125M, W) if a.mapping]
+    warm = [a.mapping for a in frontier[:4]]
+    a = orch.reanneal(GPT2_125M, W, warm, iters_max=150)
+    assert a.mapping
+    assert orch.last_result.iterations <= 150
+    assert any("reanneal" in n for n in a.notes)
+    # the re-anneal refreshed the cached frontier at the current epoch
+    assert orch.pareto_frontier(GPT2_125M, W) is \
+        orch.pareto_frontier(GPT2_125M, W)
+
+
+def test_reanneal_patches_mappings_for_excluded_devices():
+    orch = _orch(None)
+    frontier = [a for a in orch.pareto_frontier(GPT2_125M, W) if a.mapping]
+    warm = [a.mapping for a in frontier[:3]]
+    healthy = [d.name for d in EDGE_PLATFORM if d.name != GPU]
+    a = orch.reanneal(GPT2_125M, W, warm, healthy=healthy, iters_max=200)
+    assert a.mapping
+    assert GPU not in a.device_names()

@@ -1,0 +1,179 @@
+"""DeltaEvaluator: incremental plan costing must match the full
+`plan_costs` path to 1e-9 relative over arbitrary move sequences, revert
+bit-exactly, and make incremental PGSAM anneals agree with the full-path
+annealer's contract."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import Constraints, Workload, decompose, plan_costs
+from repro.core.devices import (EDGE_CPU, EDGE_GPU_NVIDIA, EDGE_NPU,
+                                EDGE_PLATFORM)
+from repro.models import ArchConfig
+from repro.qeil2 import DeltaEvaluator, PGSAMConfig, PGSAMOrchestrator
+
+TINY = ArchConfig(name="tiny", arch_type="dense", n_layers=4, d_model=256,
+                  n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=1000)
+MED = ArchConfig(name="med-12l", arch_type="dense", n_layers=12, d_model=256,
+                 n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=1000)
+SMALL_W = Workload(batch=1, prompt_tokens=32, decode_tokens=32, samples=4)
+UNCONSTRAINED = Constraints(latency_budget_factor=None)
+REL = 1e-9
+
+
+def _full_objectives(stages, devices, mapping, model, temps=None,
+                     workload=SMALL_W):
+    assign = {st.name: devices[di] for st, di in zip(stages, mapping)}
+    costs = plan_costs(stages, assign, "bf16", workload, model=model,
+                       temps=temps)
+    per = costs.per_device_time()
+    busy = sum(per.values())
+    mk = costs.makespan_s
+    underutil = 1.0 - busy / (len(devices) * mk) if mk > 0 else 0.0
+    return (costs.energy_j, mk, underutil)
+
+
+def _assert_matches(got, want):
+    for g, w in zip(got, want):
+        assert g == pytest.approx(w, rel=REL)
+
+
+@pytest.mark.parametrize("model", ["v1", "v2"])
+def test_parity_over_seeded_move_sequence(model):
+    """Acceptance: incremental costs == full plan_costs to 1e-9 after every
+    move of a randomized sequence (both energy models)."""
+    stages = decompose(MED, SMALL_W)
+    devices = EDGE_PLATFORM
+    temps = {EDGE_GPU_NVIDIA.name: 83.0} if model == "v2" else None
+    rng = np.random.default_rng(0)
+    mapping = list(rng.integers(0, len(devices), len(stages)))
+    ev = DeltaEvaluator(stages, devices, mapping, "bf16", SMALL_W,
+                        model=model, temps=temps)
+    _assert_matches(ev.objectives(),
+                    _full_objectives(stages, devices, mapping, model, temps))
+    for _ in range(120):
+        si = int(rng.integers(len(stages)))
+        di = int(rng.integers(len(devices)))
+        ev.apply(si, di)
+        mapping[si] = di
+        _assert_matches(
+            ev.objectives(),
+            _full_objectives(stages, devices, mapping, model, temps))
+
+
+@given(seed=st.integers(0, 2 ** 16), n_moves=st.integers(1, 60))
+@settings(max_examples=25, deadline=None)
+def test_parity_randomized_hypothesis(seed, n_moves):
+    """Property form of the parity contract (hypothesis-gated via
+    tests/_hypothesis_compat.py): any move sequence, v2 model with a hot
+    device, 1e-9 relative."""
+    stages = decompose(TINY, SMALL_W)
+    devices = [EDGE_CPU, EDGE_NPU, EDGE_GPU_NVIDIA]
+    temps = {EDGE_NPU.name: 71.0}
+    rng = np.random.default_rng(seed)
+    mapping = list(rng.integers(0, len(devices), len(stages)))
+    ev = DeltaEvaluator(stages, devices, mapping, "bf16", SMALL_W,
+                        model="v2", temps=temps)
+    for _ in range(n_moves):
+        si = int(rng.integers(len(stages)))
+        di = int(rng.integers(len(devices)))
+        ev.apply(si, di)
+        mapping[si] = di
+    _assert_matches(ev.objectives(),
+                    _full_objectives(stages, devices, mapping, "v2", temps))
+
+
+def test_revert_is_bit_exact():
+    stages = decompose(TINY, SMALL_W)
+    devices = EDGE_PLATFORM
+    rng = np.random.default_rng(3)
+    mapping = list(rng.integers(0, len(devices), len(stages)))
+    ev = DeltaEvaluator(stages, devices, mapping, "bf16", SMALL_W,
+                        model="v2")
+    before = ev.objectives()
+    for _ in range(50):
+        si = int(rng.integers(len(stages)))
+        di = int(rng.integers(len(devices)))
+        assert ev.peek(si, di) is not None
+    assert ev.objectives() == before           # exact, not approx
+    assert list(ev.mapping) == list(mapping)
+
+
+def test_peek_equals_apply_then_objectives():
+    stages = decompose(TINY, SMALL_W)
+    devices = [EDGE_NPU, EDGE_GPU_NVIDIA]
+    ev = DeltaEvaluator(stages, devices, [0] * len(stages), "bf16", SMALL_W,
+                        model="v2")
+    peeked = ev.peek(1, 1)
+    ev.apply(1, 1)
+    assert peeked == ev.objectives()
+
+
+def test_move_fits_tracks_destination_capacity():
+    stages = decompose(TINY, SMALL_W)
+    small = EDGE_NPU.with_overrides(mem_cap=stages[0].param_bytes * 2)
+    devices = [EDGE_GPU_NVIDIA, small]
+    ev = DeltaEvaluator(stages, devices, [0] * len(stages), "bf16", SMALL_W)
+    cap = small.mem_cap * 0.9
+    assert ev.move_fits(0, 1, cap)
+    ev.apply(0, 1)
+    # second embed-sized stage overflows the shrunken device's headroom
+    big = max(range(len(stages)), key=lambda i: stages[i].param_bytes)
+    assert not ev.move_fits(big, 1, cap)
+
+
+def test_unknown_model_rejected():
+    stages = decompose(TINY, SMALL_W)
+    with pytest.raises(ValueError):
+        DeltaEvaluator(stages, EDGE_PLATFORM, [0] * len(stages),
+                       model="v3")
+
+
+# --------------------------------------------------- PGSAM incremental flag
+
+def test_incremental_pgsam_fills_archive_costs():
+    orch = PGSAMOrchestrator(
+        EDGE_PLATFORM, UNCONSTRAINED,
+        config=PGSAMConfig(seed=0, iters_max=400, incremental=True))
+    a = orch.assign(TINY, SMALL_W)
+    assert a.mapping and a.costs is not None
+    assert all(e.costs is not None for e in orch.last_result.archive)
+    # archive objectives are the exact full-path numbers after the fill
+    for e in orch.last_result.archive:
+        assert e.objectives[0] == pytest.approx(e.costs.energy_j, rel=1e-12)
+
+
+def test_incremental_pgsam_not_worse_than_greedy_seed():
+    from repro.core import GreedyOrchestrator
+    devices = [EDGE_NPU, EDGE_GPU_NVIDIA]
+    greedy = GreedyOrchestrator(devices, UNCONSTRAINED).assign(TINY, SMALL_W)
+    inc = PGSAMOrchestrator(
+        devices, UNCONSTRAINED,
+        config=PGSAMConfig(seed=0, incremental=True)).assign(TINY, SMALL_W)
+    assert inc.energy_j <= greedy.energy_j * (1 + 1e-9)
+
+
+def test_incremental_pgsam_deterministic():
+    runs = []
+    for _ in range(2):
+        orch = PGSAMOrchestrator(
+            EDGE_PLATFORM, UNCONSTRAINED,
+            config=PGSAMConfig(seed=11, iters_max=500, incremental=True))
+        a = orch.assign(TINY, SMALL_W)
+        runs.append((a.energy_j, a.latency_s,
+                     tuple(sorted((k, v.name) for k, v in a.mapping.items()))))
+    assert runs[0] == runs[1]
+
+
+def test_incremental_pgsam_respects_memory():
+    tiny_mem = EDGE_NPU.with_overrides(mem_cap=1e6)
+    orch = PGSAMOrchestrator(
+        [tiny_mem, EDGE_GPU_NVIDIA], UNCONSTRAINED,
+        config=PGSAMConfig(seed=0, iters_max=300, incremental=True))
+    a = orch.assign(TINY, SMALL_W)
+    stages = {s.name: s for s in decompose(TINY, SMALL_W)}
+    used = {}
+    for name, dev in a.mapping.items():
+        used[dev.name] = used.get(dev.name, 0.0) + stages[name].param_bytes
+    assert used.get(tiny_mem.name, 0.0) <= tiny_mem.mem_cap * 0.9 + 1

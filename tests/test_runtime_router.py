@@ -1,0 +1,154 @@
+"""ParetoRouter: SLA tiers scalarize to archive operating points; the
+frontier cache makes repeated routing cheap and epoch-invalidatable; the
+RoutedServingEngine adapter makes ServingEngine placement frontier-driven
+per generate call."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import GPT2_125M
+from repro.core import Constraints, Workload
+from repro.core.devices import EDGE_PLATFORM
+from repro.models import ArchConfig
+from repro.qeil2 import (PGSAMConfig, PGSAMOrchestrator, ParetoRouter,
+                         SLATier, default_tiers)
+
+HETERO_W = Workload(batch=1, prompt_tokens=128, decode_tokens=256, samples=20)
+UNCONSTRAINED = Constraints(latency_budget_factor=None)
+
+
+@pytest.fixture(scope="module")
+def orch():
+    return PGSAMOrchestrator(
+        EDGE_PLATFORM, UNCONSTRAINED,
+        config=PGSAMConfig(seed=0, iters_max=1500, incremental=True),
+        energy_model="v2")
+
+
+@pytest.fixture(scope="module")
+def router(orch):
+    placed = [a for a in orch.pareto_frontier(GPT2_125M, HETERO_W)
+              if a.mapping]
+    base = min(a.latency_s for a in placed) / 0.9
+    return ParetoRouter(orch, GPT2_125M, HETERO_W,
+                        tiers=default_tiers(base))
+
+
+def test_three_tiers_route_to_two_plus_distinct_points(router):
+    """Acceptance: >=3 SLA tiers map to >=2 distinct archive operating
+    points on the 4-device edge fixture."""
+    decisions = router.route_all()
+    assert len(decisions) >= 3
+    assert len({d.point_index for d in decisions.values()}) >= 2
+
+
+def test_tier_caps_are_respected(router):
+    for name, d in router.route_all().items():
+        assert d.meets_caps, name
+        tier = d.tier
+        if tier.latency_p99_s is not None:
+            assert d.latency_s <= tier.latency_p99_s
+        if tier.energy_cap_w is not None:
+            assert d.avg_power_w <= tier.energy_cap_w
+
+
+def test_tier_weights_pull_along_the_frontier(router):
+    lat = router.route(SLATier("lat", energy_weight=0.0, latency_weight=1.0))
+    eco = router.route(SLATier("eco", energy_weight=1.0, latency_weight=0.0))
+    assert lat.latency_s <= eco.latency_s
+    assert eco.energy_j <= lat.energy_j
+    # the extremes of the archive, by construction of the scalarization
+    front = router.frontier
+    assert eco.energy_j == pytest.approx(min(a.energy_j for a in front))
+    assert lat.latency_s == pytest.approx(min(a.latency_s for a in front))
+
+
+def test_impossible_caps_degrade_to_best_effort(router):
+    d = router.route(SLATier("impossible", latency_p99_s=1e-9,
+                             energy_cap_w=1e-9))
+    assert not d.meets_caps
+    assert d.assignment.mapping
+    assert any("best-effort" in n for n in d.notes)
+
+
+def test_min_quality_raises_sampling_budget(router):
+    d = router.route(SLATier("quality", min_quality=0.95,
+                             energy_weight=1.0))
+    assert d.quality is not None and d.quality < 0.95
+    assert d.samples is not None and d.samples > HETERO_W.samples
+
+
+def test_frontier_cache_hit_and_epoch_invalidation(orch, router):
+    f1 = orch.pareto_frontier(GPT2_125M, HETERO_W)
+    f2 = orch.pareto_frontier(GPT2_125M, HETERO_W)
+    assert f1 is f2                       # memoized, no second anneal
+    epoch = orch.health_epoch
+    orch.invalidate_frontier()
+    assert orch.health_epoch == epoch + 1
+    f3 = orch.pareto_frontier(GPT2_125M, HETERO_W)
+    assert f3 is not f1                   # fresh anneal after invalidation
+    # the router transparently re-pulls on its next route
+    d = router.route("economy")
+    assert d.assignment in router.frontier
+    assert router._epoch == orch.health_epoch
+
+
+def test_on_drift_invalidates(orch):
+    from repro.core import DriftEvent
+    f1 = orch.pareto_frontier(GPT2_125M, HETERO_W)
+    orch.on_drift(DriftEvent(0.0, "nvidia-rtx-pro-5000", "thermal_margin"))
+    assert orch.pareto_frontier(GPT2_125M, HETERO_W) is not f1
+
+
+def test_healthy_subset_routes_without_excluded_device(orch):
+    healthy = [d.name for d in EDGE_PLATFORM
+               if d.name != "nvidia-rtx-pro-5000"]
+    r = ParetoRouter(orch, GPT2_125M, HETERO_W,
+                     tiers=[SLATier("eco", energy_weight=1.0)],
+                     healthy=healthy)
+    d = r.route("eco")
+    assert "nvidia-rtx-pro-5000" not in d.assignment.device_names()
+
+
+# ------------------------------------------------- serving engine adapter
+
+def test_routed_serving_engine_places_per_generate():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import Model
+    from repro.serving import ServingEngine
+    from repro.qeil2 import RoutedServingEngine
+
+    cfg = ArchConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+    w = Workload(batch=2, prompt_tokens=3, decode_tokens=4, samples=2)
+    orch = PGSAMOrchestrator(
+        EDGE_PLATFORM, UNCONSTRAINED,
+        config=PGSAMConfig(seed=0, iters_max=300, incremental=True))
+    placed = [a for a in orch.pareto_frontier(cfg, w) if a.mapping]
+    base = min(a.latency_s for a in placed) / 0.9
+    router = ParetoRouter(orch, cfg, w, tiers=default_tiers(base))
+
+    model = Model(cfg, dtype=jnp.float32)
+    engine = ServingEngine(model, params=model.init(jax.random.key(0)),
+                           max_new_tokens=4)
+    routed = RoutedServingEngine(engine, router, default_tier="economy")
+    prompts = [np.array([1, 2, 3], np.int32), np.array([4, 5, 6], np.int32)]
+    res = routed.generate(prompts, n_samples=2)
+    assert len(res) == 2 and all(len(r.samples) == 2 for r in res)
+    assert len(routed.decisions) == 1
+    assert engine.last_placement is routed.decisions[0].assignment
+    # a second call under a different tier re-routes
+    routed.generate(prompts, tier="interactive", n_samples=1)
+    assert len(routed.decisions) == 2
+    assert routed.decisions[1].tier.name == "interactive"
+    assert len(engine.placements) == 2
+
+
+def test_routed_engine_requires_some_tier():
+    class _Engine:                    # placement hook only, no jax needed
+        placement_provider = None
+    r = object.__new__(ParetoRouter)  # never routed before raising
+    from repro.qeil2 import RoutedServingEngine
+    routed = RoutedServingEngine(_Engine(), r)
+    with pytest.raises(ValueError):
+        routed.generate([np.array([1], np.int32)])
