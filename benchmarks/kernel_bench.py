@@ -1,10 +1,23 @@
 """Kernel microbenchmarks: interpret-mode us/call on CPU (correctness-path
 cost) + modeled TPU v5e roofline time for the production shapes each kernel
-serves."""
+serves.
+
+Besides the human-readable table, ``run()`` emits machine-readable per-kernel
+trace records (one per timing rep: flops, bytes, measured us, roofline us)
+suitable for `repro.qeil2.telemetry.TraceStore.ingest` — the measurement side
+of the calibration loop. ``python benchmarks/kernel_bench.py --out FILE``
+appends them to a JSONL trace directly.
+
+Note the honesty caveat carried in each record's ``backend`` field: the
+measured numbers here are CPU interpret-mode timings while the roofline is
+the modeled TPU time, so the implied duty factor eta = roofline/measured is
+meaningful only when both sides describe the same silicon (the fitter clamps
+eta to (0, 1]; real calibration feeds records measured on the target device).
+"""
 from __future__ import annotations
 
 import time
-from typing import Dict
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -14,15 +27,22 @@ from repro.core.devices import TPU_V5E
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
 from repro.kernels.ssd_scan.ops import ssd_chunk
-from benchmarks.common import fmt_table
+try:
+    from benchmarks.common import fmt_table
+except ModuleNotFoundError:      # run as a script: benchmarks/ is sys.path[0]
+    from common import fmt_table
 
 
-def _time(fn, *args, n=3, **kw):
+def _time_reps(fn, *args, n=3, **kw) -> List[float]:
+    """Per-rep us/call (warm call excluded) — reps feed the bootstrap CI of
+    the fitted per-kernel duty factor."""
     fn(*args, **kw)  # warm
-    t0 = time.perf_counter()
+    out = []
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kw))
-    return (time.perf_counter() - t0) / n * 1e6
+        out.append((time.perf_counter() - t0) * 1e6)
+    return out
 
 
 def _tpu_roofline_us(flops: float, bytes_moved: float) -> float:
@@ -31,9 +51,19 @@ def _tpu_roofline_us(flops: float, bytes_moved: float) -> float:
     return t * 1e6
 
 
+def _records(kernel: str, reps: List[float], flops: float,
+             bytes_moved: float) -> List[dict]:
+    roofline = _tpu_roofline_us(flops, bytes_moved)
+    return [{"kind": "kernel", "kernel": kernel, "rep": i,
+             "flops": flops, "bytes": bytes_moved,
+             "measured_us": us, "roofline_us": roofline,
+             "device": TPU_V5E.name, "backend": "cpu-interpret"}
+            for i, us in enumerate(reps)]
+
+
 def run(verbose: bool = True) -> Dict:
     rows = []
-    results = {}
+    results: Dict = {"records": []}
 
     # flash attention: one prefill tile set (small CPU shape; model the 32k)
     B, S, H, D = 1, 256, 4, 64
@@ -41,7 +71,13 @@ def run(verbose: bool = True) -> Dict:
     q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
-    us = _time(flash_attention_pallas, q, k, v, block_q=128, block_k=128)
+    reps = _time_reps(flash_attention_pallas, q, k, v,
+                      block_q=128, block_k=128)
+    us = float(np.mean(reps))
+    # measured shape's analytic costs (causal: half the score matrix)
+    fl_m = 4.0 * B * S * S / 2 * H * D
+    by_m = 4 * B * S * H * D * 4                    # q,k,v,out fp32
+    results["records"] += _records("flash_attention", reps, fl_m, by_m)
     # production shape: qwen2-72b prefill_32k per chip slice
     Sp, Hp = 32768, 4  # heads per chip after sharding
     fl = 4.0 * Sp * Sp / 2 * Hp * 128
@@ -57,7 +93,12 @@ def run(verbose: bool = True) -> Dict:
     qd = jax.random.normal(ks[0], (2, 1, 4, 64), jnp.float32)
     pos = jnp.broadcast_to(jnp.arange(W)[None], (2, W)).astype(jnp.int32)
     qpos = jnp.full((2,), W - 1, jnp.int32)
-    us = _time(decode_attention_pallas, qd, kc, vc, pos, qpos, block_k=256)
+    reps = _time_reps(decode_attention_pallas, qd, kc, vc, pos, qpos,
+                      block_k=256)
+    us = float(np.mean(reps))
+    fl_m = 4.0 * 2 * W * 4 * 64                     # QK^T + PV over the cache
+    by_m = 2 * W * 2 * 64 * 2 * 4                   # k+v cache fp32 streams
+    results["records"] += _records("decode_attention", reps, fl_m, by_m)
     fl_d = 4.0 * 32768 * 8 * 128 * 8   # decode_32k per chip: 8 batch x kv8
     by_d = 32768 * 2 * 8 * 128 * 2 * 8
     rows.append(["decode_attention", f"{us:.0f}",
@@ -73,7 +114,11 @@ def run(verbose: bool = True) -> Dict:
     dAcs = jnp.cumsum(dA, axis=2)
     Bm = jax.random.normal(ks[1], (2, nc, Q, 2, N), jnp.float32)
     Cm = jax.random.normal(ks[2], (2, nc, Q, 2, N), jnp.float32)
-    us = _time(ssd_chunk, x, dt, dA, dAcs, Bm, Cm)
+    reps = _time_reps(ssd_chunk, x, dt, dA, dAcs, Bm, Cm)
+    us = float(np.mean(reps))
+    fl_m = 2 * nc * (2 * Q * Q * 2 * (P + N))       # chunked scan matmuls
+    by_m = 2 * nc * Q * 2 * (P + 2 * N) * 4
+    results["records"] += _records("ssd_scan", reps, fl_m, by_m)
     # mamba2-370m prefill_32k per chip: 32 heads/16 = 2 heads x 32k tokens
     fl_s = 2 * (32768 / 256) * (2 * 256 * 256 * (64 + 128))
     by_s = 2 * 32768 * (64 + 2 * 128) * 4
@@ -85,4 +130,24 @@ def run(verbose: bool = True) -> Dict:
         print(fmt_table(["kernel", "interpret us/call",
                          "modeled TPU us (prod shape)"],
                         rows, "Kernel microbenchmarks"))
+        print(f"{len(results['records'])} trace records "
+              f"(TraceStore-ingestible)")
     return results
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="append per-rep kernel records to this JSONL trace")
+    args = ap.parse_args()
+    results = run(verbose=True)
+    if args.out:
+        from repro.qeil2.telemetry import TraceStore
+        store = TraceStore(path=args.out)
+        n = store.ingest_kernel_bench(results)
+        print(f"appended {n} kernel records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,8 @@ BENCHES = [
     ("pgsam_compare", "benchmarks.pgsam_compare",
      "all_within_5pct_of_oracle"),
     ("pareto_router", "benchmarks.pareto_router", "acceptance_all"),
+    ("calibration_report", "benchmarks.calibration_report",
+     "acceptance_all"),
 ]
 
 

@@ -143,7 +143,8 @@ def plan_costs(stages: List[Stage], assignment: Dict[str, DeviceProfile],
                throttle: Optional[Dict[str, float]] = None,
                model: str = "v1",
                temps: Optional[Dict[str, float]] = None,
-               headroom: float = 0.9) -> PlanCosts:
+               headroom: float = 0.9,
+               provider=None) -> PlanCosts:
     """Cost a full stage->device assignment, including cross-device activation
     transfers whenever consecutive layers live on different devices.
 
@@ -152,14 +153,20 @@ def plan_costs(stages: List[Stage], assignment: Dict[str, DeviceProfile],
     bit-for-bit reproducible. ``temps`` (device -> junction degC) and
     ``headroom`` (allocator fraction that counts as CPQ=1) only affect the v2
     path, which models temperature-dependent leakage and capacity pressure.
+    ``provider`` (an optional `repro.qeil2.telemetry.CalibratedSignalProvider`)
+    substitutes fitted coefficients and measured kernel times into the v2
+    signals; it has no meaning for v1 and is rejected there.
     """
     if model == "v2":
         from repro.qeil2.energy_v2 import plan_costs_v2
         return plan_costs_v2(stages, assignment, quant, workload,
                              throttle=throttle, temps=temps,
-                             headroom=headroom)
+                             headroom=headroom, provider=provider)
     if model != "v1":
         raise ValueError(f"unknown energy model {model!r} (want 'v1' or 'v2')")
+    if provider is not None:
+        raise ValueError("provider= is a v2 calibration hook; "
+                         "pass model='v2' to use it")
     throttle = throttle or {}
     execs = []
     for st in stages:

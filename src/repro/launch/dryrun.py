@@ -231,7 +231,16 @@ def main() -> None:
     ap.add_argument("--cache-fp8", action="store_true")
     ap.add_argument("--cross-cache", action="store_true")
     ap.add_argument("--moe-dense", action="store_true")
+    ap.add_argument("--trace", default=None,
+                    help="append each artifact's compiled.cost_analysis() "
+                         "FLOP/byte counts to this JSONL telemetry trace "
+                         "(repro.qeil2.telemetry.TraceStore)")
     args = ap.parse_args()
+
+    trace_store = None
+    if args.trace:
+        from repro.qeil2.telemetry import TraceStore
+        trace_store = TraceStore(path=args.trace)
 
     archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
@@ -253,6 +262,8 @@ def main() -> None:
                               moe_dense=args.moe_dense)
                 if "error" in art:
                     failures.append((arch, shape_name, mesh_kind))
+                elif trace_store is not None:
+                    trace_store.ingest_dryrun_artifact(art)
     if failures:
         print(f"\n{len(failures)} FAILURES: {failures}")
         raise SystemExit(1)

@@ -5,6 +5,8 @@ energy_v2 — unified energy equation modulated by the signal triple
 pgsam     — Pareto-Guided Simulated Annealing with Momentum + orchestrator
 runtime   — Pareto-routed serving runtime (SLA router, control loop,
             incremental delta-cost evaluation)
+telemetry — trace collection + coefficient fitting + calibrated signal
+            provider (measured traces close the loop back into the model)
 """
 from repro.qeil2.signals import (SignalSet, cpq, cpq_power_factor, dasi,
                                  memory_saturation, phi, signals_for)
@@ -15,3 +17,7 @@ from repro.qeil2.pgsam import (ArchiveEntry, PGSAM, PGSAMConfig,
 from repro.qeil2.runtime import (ControlLoop, DeltaEvaluator, LoopConfig,
                                  ParetoRouter, RoutedServingEngine,
                                  RoutingDecision, SLATier, default_tiers)
+from repro.qeil2.telemetry import (CalibratedSignalProvider,
+                                   CalibrationFitter, CalibrationProfile,
+                                   ResidualReport, TraceStore,
+                                   synthetic_trace_store)

@@ -55,21 +55,34 @@ def execute_stage_v2(stage: Stage, device: DeviceProfile,
                      throttle: float = 1.0,
                      resident_bytes: float = 0.0,
                      temp_c: Optional[float] = None,
-                     headroom: float = 0.9) -> StageExecutionV2:
+                     headroom: float = 0.9,
+                     provider=None) -> StageExecutionV2:
     """Roofline time (identical to v1) + DASI/CPQ/Phi-modulated energy.
 
     ``resident_bytes`` — device working set under the candidate assignment
     (drives CPQ); ``temp_c`` — device junction temperature from the safety
-    monitor's RC model (drives Phi; ambient when None).
+    monitor's RC model (drives Phi; ambient when None). ``provider`` — an
+    optional `repro.qeil2.telemetry.CalibratedSignalProvider`: signals come
+    from its fitted coefficients, and where a measured Pallas kernel backs
+    the stage, execution time stretches to the measured time (roofline /
+    eta) while both duty cycles shrink by eta. ``provider=None`` is the
+    analytic path, bit-for-bit unchanged.
     """
     eff = device.util * throttle
     t_c = stage.flops / (device.peak_flops * eff)
     t_m = stage.bytes_moved / (device.mem_bw * eff)
     t = max(t_c, t_m)
-    sig = signals_for(stage, device, resident_bytes, temp_c, headroom)
+    if provider is None:
+        sig = signals_for(stage, device, resident_bytes, temp_c, headroom)
+        cpq_factor = cpq_power_factor(sig.cpq)
+    else:
+        sig = provider.signals_for(stage, device, resident_bytes, temp_c,
+                                   headroom)
+        cpq_factor = provider.cpq_power_factor(sig.cpq)
+        t = t * provider.time_scale(stage)
     activity = W_COMPUTE * sig.dasi + W_MEMORY * sig.msat
     p_dyn = (device.power_peak - device.power_idle) * device.util * \
-        device.lambda_eff * activity * cpq_power_factor(sig.cpq) * throttle
+        device.lambda_eff * activity * cpq_factor * throttle
     energy = t * p_dyn * quant_factor(quant) / sig.phi
     return StageExecutionV2(stage, device, t, energy,
                             "compute" if t_c >= t_m else "memory",
@@ -82,14 +95,17 @@ def plan_costs_v2(stages: List[Stage],
                   workload: Optional[Workload] = None,
                   throttle: Optional[Dict[str, float]] = None,
                   temps: Optional[Dict[str, float]] = None,
-                  headroom: float = 0.9) -> PlanCosts:
+                  headroom: float = 0.9,
+                  provider=None) -> PlanCosts:
     """v2 counterpart of `repro.core.energy.plan_costs`.
 
     Resident bytes per device are accumulated from the full assignment first,
     so every stage on a device sees the same (final) capacity pressure — the
     steady-state working set, which is what the allocator actually holds
     during pipelined execution. ``temps`` maps device name -> junction degC
-    (e.g. from ``SafetyMonitor.thermal[...].state.temp_c``).
+    (e.g. from ``SafetyMonitor.thermal[...].state.temp_c``); ``provider``
+    an optional `repro.qeil2.telemetry.CalibratedSignalProvider` (fitted
+    coefficients + measured kernel times; None = analytic, bit-for-bit).
     """
     throttle = throttle or {}
     temps = temps or {}
@@ -106,7 +122,8 @@ def plan_costs_v2(stages: List[Stage],
             throttle=throttle.get(dev.name, 1.0),
             resident_bytes=resident[dev.name],
             temp_c=temps.get(dev.name),
-            headroom=headroom))
+            headroom=headroom,
+            provider=provider))
 
     transfer_bytes = boundary_transfer_bytes(execs, workload)
     link_bw = min(d.link_bw for d in assignment.values())

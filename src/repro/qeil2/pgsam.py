@@ -107,7 +107,11 @@ class PGSAM:
                  memory_headroom: float = 0.9,
                  energy_model: str = "v1",
                  temps: Optional[Dict[str, float]] = None,
-                 latency_budget_s: float = float("inf")):
+                 latency_budget_s: float = float("inf"),
+                 provider=None):
+        if provider is not None and energy_model != "v2":
+            raise ValueError("a CalibratedSignalProvider requires "
+                             "energy_model='v2'")
         self.stages = list(stages)
         self.devices = list(devices)
         self.quant = quant
@@ -117,6 +121,7 @@ class PGSAM:
         self.energy_model = energy_model
         self.temps = temps
         self.latency_budget_s = latency_budget_s
+        self.provider = provider
         self.rng = np.random.default_rng(config.seed)
         # per-device param_bytes capacity in bytes
         self._caps = [d.mem_cap * memory_headroom for d in devices]
@@ -135,7 +140,7 @@ class PGSAM:
                   for st, di in zip(self.stages, mapping)}
         costs = plan_costs(self.stages, assign, self.quant, self.workload,
                            model=self.energy_model, temps=self.temps,
-                           headroom=self.headroom)
+                           headroom=self.headroom, provider=self.provider)
         makespan = costs.makespan_s
         per_dev = costs.per_device_time()
         busy = sum(per_dev.values())
@@ -237,7 +242,8 @@ class PGSAM:
             evalr = DeltaEvaluator(self.stages, self.devices, current.mapping,
                                    self.quant, self.workload,
                                    model=self.energy_model, temps=self.temps,
-                                   headroom=self.headroom)
+                                   headroom=self.headroom,
+                                   provider=self.provider)
 
         for it in range(1, self.cfg.iters_max + 1):
             prop = self._propose(current.mapping, momentum_devs)
@@ -334,14 +340,22 @@ class PGSAMOrchestrator:
                  quant: str = "bf16",
                  config: PGSAMConfig = PGSAMConfig(),
                  energy_model: str = "v1",
-                 safety=None):
+                 safety=None,
+                 provider=None):
         if not devices:
             raise ValueError("need at least one device")
+        if provider is not None and energy_model != "v2":
+            raise ValueError("a CalibratedSignalProvider requires "
+                             "energy_model='v2'")
         self.devices = list(devices)
         self.constraints = constraints
         self.quant = quant
         self.config = config
         self.energy_model = energy_model
+        # optional repro.qeil2.telemetry.CalibratedSignalProvider: fitted
+        # coefficients + measured kernel times for every v2 plan costing
+        # (anneals, re-anneals, frontier materialization).
+        self.provider = provider
         # optional repro.core.safety.SafetyMonitor: its RC thermal states feed
         # Phi (v2 energy) and its health view feeds reassign_on_failure.
         self.safety = safety
@@ -416,7 +430,8 @@ class PGSAMOrchestrator:
                     memory_headroom=self.constraints.memory_headroom,
                     energy_model=self.energy_model, temps=temps,
                     latency_budget_s=latency_budget(
-                        self.constraints, stages, devices, self.quant))
+                        self.constraints, stages, devices, self.quant),
+                    provider=self.provider)
         result = sam.optimize(seeds)
         self.last_result = result
         return stages, devices, result
@@ -442,9 +457,14 @@ class PGSAMOrchestrator:
     # ---------------------------------------------------- frontier caching
     def _frontier_key(self, cfg: ArchConfig, workload: Workload,
                       healthy: Optional[Sequence[str]]) -> tuple:
+        # a (frozen, hashable) CalibrationProfile participates directly: a
+        # refitted profile is a different key, so stale-calibration archives
+        # are never served.
+        profile = (self.provider.profile if self.provider is not None
+                   else None)
         return (cfg.name, repr(cfg), workload,
                 tuple(sorted(healthy)) if healthy is not None else None,
-                self.quant, self.energy_model, self.health_epoch)
+                self.quant, self.energy_model, self.health_epoch, profile)
 
     def invalidate_frontier(self) -> None:
         """Bump the device-health epoch and drop every cached archive. Called
@@ -567,7 +587,8 @@ class PGSAMOrchestrator:
                     memory_headroom=self.constraints.memory_headroom,
                     energy_model=self.energy_model, temps=temps,
                     latency_budget_s=latency_budget(
-                        self.constraints, stages, devices, self.quant))
+                        self.constraints, stages, devices, self.quant),
+                    provider=self.provider)
         result = sam.optimize(seeds)
         self.last_result = result
         # the world changed enough to warrant a re-anneal, so any archive a

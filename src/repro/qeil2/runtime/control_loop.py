@@ -78,13 +78,18 @@ class ControlLoop:
 
     def __init__(self, orchestrator, safety: SafetyMonitor, cfg: ArchConfig,
                  workload: Workload, loop: LoopConfig = LoopConfig(),
-                 router=None):
+                 router=None, trace=None):
         self.orch = orchestrator
         self.safety = safety
         self.cfg = cfg
         self.workload = workload
         self.loop = loop
         self.router = router
+        # optional repro.qeil2.telemetry.TraceStore: every step emits one
+        # execution record (temps/powers/energy + per-stage SignalSet
+        # snapshots when the plan was v2-costed) — the runtime's side of the
+        # measurement loop the calibration fitter closes.
+        self.trace = trace
         self.assignment: Optional[Assignment] = None
         self._archive: List[Assignment] = []
         self.t_s = 0.0
@@ -282,7 +287,7 @@ class ControlLoop:
         if drift and self.loop.adaptive:
             self._orchestrate(warm=True)
             reannealed = True
-        return StepReport(
+        report = StepReport(
             t_s=self.t_s, load=load,
             temps={n: tm.state.temp_c
                    for n, tm in self.safety.thermal.items()},
@@ -290,3 +295,18 @@ class ControlLoop:
             served=served, inferences=inferences, energy_j=energy,
             throttle_events=self.safety.total_throttle_events(),
             excluded=sorted(self._excluded))
+        if self.trace is not None:
+            self.trace.ingest_step(report, signals=self._plan_signals(executed))
+        return report
+
+    def _plan_signals(self, assignment) -> Dict[str, dict]:
+        """Per-stage `SignalSet.as_dict()` snapshots of the executed plan —
+        present when the orchestrator costs plans with the v2 model (its
+        `StageExecutionV2` records carry the signal triple)."""
+        out: Dict[str, dict] = {}
+        if assignment is not None and assignment.costs is not None:
+            for e in assignment.costs.executions:
+                sig = getattr(e, "signals", None)
+                if sig is not None:
+                    out[e.stage.name] = sig.as_dict()
+        return out

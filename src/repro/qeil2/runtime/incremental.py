@@ -77,21 +77,28 @@ class DeltaEvaluator:
                  model: str = "v2",
                  temps: Optional[Dict[str, float]] = None,
                  headroom: float = 0.9,
-                 throttle: Optional[Dict[str, float]] = None):
+                 throttle: Optional[Dict[str, float]] = None,
+                 provider=None):
         if model not in ("v1", "v2"):
             raise ValueError(f"unknown energy model {model!r}")
+        if provider is not None and model != "v2":
+            raise ValueError("a CalibratedSignalProvider requires "
+                             "model='v2'")
         self.stages = list(stages)
         self.devices = list(devices)
         self.quant = quant
         self.workload = workload
         self.model = model
         self.headroom = headroom
+        self.provider = provider
         temps = temps or {}
         throttle = throttle or {}
         self._throttle = [throttle.get(d.name, 1.0) for d in self.devices]
         # Phi is fixed per anneal (temperatures evolve between re-anneals, not
-        # inside one), so the leakage divisor is a per-device constant here.
-        self._phi = [phi(temps.get(d.name, d.t_ambient))
+        # inside one), so the leakage divisor is a per-device constant here —
+        # from the calibrated provider when one is installed.
+        phi_fn = phi if provider is None else provider.phi
+        self._phi = [phi_fn(temps.get(d.name, d.t_ambient))
                      for d in self.devices]
 
         # --- phase chains + per-boundary costs (device-independent) ---------
@@ -142,7 +149,8 @@ class DeltaEvaluator:
         thr = self._throttle[di]
         if self.model == "v2":
             ex = execute_stage_v2(st, dev, self.quant, throttle=thr,
-                                  headroom=self.headroom)
+                                  headroom=self.headroom,
+                                  provider=self.provider)
             out = (ex.time_s, ex.energy_j * ex.signals.phi)
         else:
             ex = execute_stage(st, dev, self.quant, throttle=thr)
@@ -155,7 +163,9 @@ class DeltaEvaluator:
         if self.model != "v2":
             return 1.0
         c = cpq(self._resident[di], self.devices[di], self.headroom)
-        return cpq_power_factor(c) / self._phi[di]
+        cpf = (cpq_power_factor(c) if self.provider is None
+               else self.provider.cpq_power_factor(c))
+        return cpf / self._phi[di]
 
     # --------------------------------------------------------------- rebuild
     def rebuild(self, mapping: Sequence[int]) -> None:

@@ -50,21 +50,28 @@ PHI_T_SLOPE = 21.6
 PHI_T_REF_C = 25.0
 
 
-def dasi(stage: Stage, device: DeviceProfile) -> float:
+def dasi(stage: Stage, device: DeviceProfile,
+         ridge_scale: float = 1.0) -> float:
     """Compute-side saturation: fraction of roofline time the MXU/SMs are busy.
 
     ``min(1, intensity / ridge_point)`` — equals 1 exactly at and above the
     ridge point (compute-bound), and decays linearly with arithmetic intensity
     below it (memory-bound stages leave compute idling).
+
+    ``ridge_scale`` is the calibration hook (`repro.qeil2.telemetry`): the
+    effective ridge point is ``ridge_point * ridge_scale``, fitted against
+    measured kernel times instead of taken from the datasheet (RooflineBench's
+    central observation). The default 1.0 is the analytic model, bit-for-bit.
     """
-    return min(1.0, stage.intensity / device.ridge_point)
+    return min(1.0, stage.intensity / (device.ridge_point * ridge_scale))
 
 
-def memory_saturation(stage: Stage, device: DeviceProfile) -> float:
+def memory_saturation(stage: Stage, device: DeviceProfile,
+                      ridge_scale: float = 1.0) -> float:
     """Dual of DASI: fraction of roofline time the memory subsystem is busy."""
     if stage.intensity <= 0:
         return 1.0
-    return min(1.0, device.ridge_point / stage.intensity)
+    return min(1.0, device.ridge_point * ridge_scale / stage.intensity)
 
 
 def cpq(working_set_bytes: float, device: DeviceProfile,
@@ -80,9 +87,14 @@ def cpq(working_set_bytes: float, device: DeviceProfile,
     return max(0.0, working_set_bytes / cap)
 
 
-def cpq_power_factor(cpq_value: float) -> float:
-    """Dynamic-power multiplier from memory pressure: 1 + KAPPA * cpq^EXP."""
-    return 1.0 + CPQ_KAPPA * min(cpq_value, 1.0) ** CPQ_EXP
+def cpq_power_factor(cpq_value: float, kappa: float = CPQ_KAPPA,
+                     exp: float = CPQ_EXP) -> float:
+    """Dynamic-power multiplier from memory pressure: 1 + kappa * cpq^exp.
+
+    ``kappa``/``exp`` default to the documented first-principles constants;
+    a fitted `repro.qeil2.telemetry.CalibrationProfile` substitutes measured
+    values (the defaults keep the uncalibrated path bit-for-bit)."""
+    return 1.0 + kappa * min(cpq_value, 1.0) ** exp
 
 
 def phi(temp_c: float, rho_ref: float = PHI_RHO_REF,
@@ -106,6 +118,12 @@ class SignalSet:
     msat: float           # memory duty cycle in (0, 1]
     cpq: float            # capacity pressure, >= 0
     phi: float            # thermal yield in (0, 1]
+
+    def as_dict(self) -> dict:
+        """Plain-float dict for structured logging / trace emission
+        (`repro.qeil2.telemetry.TraceStore` step records)."""
+        return {"dasi": float(self.dasi), "msat": float(self.msat),
+                "cpq": float(self.cpq), "phi": float(self.phi)}
 
 
 def signals_for(stage: Stage, device: DeviceProfile,

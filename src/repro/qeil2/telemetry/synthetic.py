@@ -1,0 +1,107 @@
+"""Seeded synthetic trace fixture: a ground-truth world to calibrate against.
+
+Real traces need hardware; CI and the tier-1 tests need a measurement source
+whose *true* coefficients are known so the fit can be judged. This module
+generates traces from the v2 energy equation evaluated with a ground-truth
+coefficient vector deliberately different from the documented defaults (the
+situation the paper's "traceable to semiconductor physics" claim glosses
+over: datasheet constants are starting points, silicon disagrees), plus
+multiplicative lognormal measurement noise.
+
+The fixture is deterministic under ``seed`` — `benchmarks/calibration_report.py`
+gates CI on its fitted output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.devices import EDGE_PLATFORM
+from repro.core.formalisms import quant_factor
+from repro.qeil2.telemetry.fit import PHI_T_REF_C, predict_log_energy
+from repro.qeil2.telemetry.trace import TraceStore
+
+# ground truth: the silicon this synthetic platform "actually" is. Every
+# entry deviates from the documented default (ridge 1.0, kappa 0.35, exp 2.0,
+# rho 0.08, slope 21.6) by enough that a fit must move to explain the data.
+TRUE_COEFFS = {
+    "ridge_scale": 0.75,      # kernels saturate compute earlier than datasheet
+    "cpq_kappa": 0.55,        # heavier thrash penalty than the published cap
+    "cpq_exp": 2.6,           # sharper onset near capacity
+    "phi_rho_ref": 0.13,      # leakier silicon at reference temperature
+    "phi_t_slope": 17.0,      # faster leakage growth with temperature
+}
+TRUE_KERNEL_ETA = {
+    "flash_attention": 0.82,  # measured time 1/0.82 of roofline
+    "decode_attention": 0.64,
+    "ssd_scan": 0.71,
+}
+
+
+def synthetic_trace_store(seed: int = 0, n_energy: int = 240,
+                          n_kernel_reps: int = 12,
+                          noise: float = 0.03,
+                          true_coeffs: Optional[Dict[str, float]] = None,
+                          path: Optional[str] = None) -> TraceStore:
+    """Generate a `TraceStore` of energy + kernel records from ground truth.
+
+    Energy records sweep arithmetic intensity (log-uniform around each
+    device's ridge point), capacity pressure in [0, 1.2] and junction
+    temperature in [25, 95] degC over the 4-device edge platform; measured
+    joules are the true-coefficient model times lognormal(0, ``noise``).
+    Kernel records time each Pallas kernel ``n_kernel_reps`` times at its
+    true duty factor with the same noise model.
+    """
+    rng = np.random.default_rng(seed)
+    tc = dict(TRUE_COEFFS)
+    tc.update(true_coeffs or {})
+    theta = (tc["ridge_scale"], tc["cpq_kappa"], tc["cpq_exp"],
+             tc["phi_rho_ref"], tc["phi_t_slope"])
+    store = TraceStore(path=path)
+
+    devices = list(EDGE_PLATFORM)
+    for i in range(n_energy):
+        dev = devices[int(rng.integers(len(devices)))]
+        # intensity from 1/30x to 30x the ridge: spans both roofline regimes
+        intensity = dev.ridge_point * float(
+            np.exp(rng.uniform(np.log(1 / 30), np.log(30))))
+        cpq_in = float(rng.uniform(0.0, 1.2))
+        temp_c = float(rng.uniform(25.0, 95.0))
+        t_s = float(np.exp(rng.uniform(np.log(1e-4), np.log(1e-1))))
+        p0 = (dev.power_peak - dev.power_idle) * dev.util * dev.lambda_eff
+        quant = "bf16" if i % 3 else "fp8"
+        fq = quant_factor(quant)
+        cols = {
+            "intensity": np.array([intensity]),
+            "ridge": np.array([dev.ridge_point]),
+            "cpq": np.array([cpq_in]),
+            "temp_c": np.array([temp_c]),
+            "log_base": np.array([np.log(t_s * p0 * fq)]),
+        }
+        log_e = float(predict_log_energy(theta, cols, PHI_T_REF_C)[0])
+        energy_j = float(np.exp(log_e + rng.normal(0.0, noise)))
+        store.ingest({
+            "kind": "energy", "device": dev.name,
+            "intensity": intensity, "ridge": dev.ridge_point,
+            "cpq": cpq_in, "temp_c": temp_c, "t_s": t_s, "p0_w": p0,
+            "quant_f": fq, "energy_j": energy_j, "quant": quant,
+        })
+
+    for kernel, eta in sorted(TRUE_KERNEL_ETA.items()):
+        # nominal per-call shape costs (arbitrary but fixed — eta is a ratio)
+        flops = {"flash_attention": 2.1e9, "decode_attention": 1.3e8,
+                 "ssd_scan": 5.4e8}[kernel]
+        bytes_moved = {"flash_attention": 6.3e6, "decode_attention": 8.4e6,
+                       "ssd_scan": 1.2e7}[kernel]
+        roofline_us = 120.0
+        for rep in range(n_kernel_reps):
+            measured = roofline_us / eta * float(
+                np.exp(rng.normal(0.0, noise)))
+            store.ingest({
+                "kind": "kernel", "kernel": kernel, "rep": rep,
+                "flops": flops, "bytes": bytes_moved,
+                "measured_us": measured, "roofline_us": roofline_us,
+                "device": "synthetic",
+            })
+    return store

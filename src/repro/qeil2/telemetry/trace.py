@@ -1,0 +1,174 @@
+"""Trace collection: the measurement side of the calibration loop.
+
+`TraceStore` is an append-only store of telemetry records with optional JSONL
+persistence. Three record kinds close the measurement loop the ROADMAP's two
+open calibration items describe:
+
+* ``kernel`` — measured Pallas kernel timings from `benchmarks/kernel_bench.py`
+  (per-rep: flops, bytes, measured µs, roofline µs). The fitter turns these
+  into per-kernel duty factors ``eta = t_roofline / t_measured`` that the
+  `CalibratedSignalProvider` substitutes for analytic FLOP/byte duty cycles.
+* ``energy`` — per-(stage, device) energy observations carrying the minimal
+  sufficient statistics of the v2 energy equation (roofline time, base power,
+  arithmetic intensity, ridge point, CPQ input, junction temperature, quant
+  factor, measured joules). These drive the DASI-knee / CPQ-curve / Phi-leakage
+  coefficient fit.
+* ``step`` — per-step execution records emitted by
+  `repro.qeil2.runtime.control_loop.ControlLoop` (temps, powers, energy,
+  per-stage `SignalSet.as_dict()` snapshots): runtime provenance for the
+  residual report and replayable input for offline refits.
+* ``dryrun`` — compiled-HLO FLOP/byte counts from `repro.launch.dryrun`'s
+  ``compiled.cost_analysis()``, cross-checking the analytic decomposition
+  counts the energy records are built from.
+
+Records are plain dicts (JSON-serializable); `ingest` validates the minimal
+per-kind schema so a malformed producer fails at the boundary, not inside the
+fitter.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional
+
+# minimal required keys per record kind (ingest-time schema check)
+_SCHEMAS: Dict[str, tuple] = {
+    "kernel": ("kernel", "flops", "bytes", "measured_us", "roofline_us"),
+    "energy": ("device", "intensity", "ridge", "cpq", "temp_c",
+               "t_s", "p0_w", "quant_f", "energy_j"),
+    "step": ("t_s", "temps", "powers", "energy_j"),
+    "dryrun": ("arch", "shape", "flops"),
+}
+
+
+def _validate(record: dict) -> dict:
+    kind = record.get("kind")
+    if kind not in _SCHEMAS:
+        raise ValueError(f"unknown trace record kind {kind!r} "
+                         f"(want one of {sorted(_SCHEMAS)})")
+    missing = [k for k in _SCHEMAS[kind] if k not in record]
+    if missing:
+        raise ValueError(f"{kind!r} record missing keys {missing}")
+    return record
+
+
+class TraceStore:
+    """Append-only telemetry store with optional JSONL persistence.
+
+    ``path=None`` keeps everything in memory (tests, synthetic fixtures);
+    with a path every `ingest` appends one JSON line, so a crashed run's
+    traces survive and `TraceStore.load` resumes from them.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._records: List[dict] = []
+        if path is not None and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        # resumed records go through the same schema gate as
+                        # fresh ingests: a truncated/hand-edited trace fails
+                        # here, not inside the fitter.
+                        self._records.append(_validate(json.loads(line)))
+
+    # ------------------------------------------------------------- ingestion
+    def ingest(self, record: dict) -> dict:
+        """Validate + append one record (and persist it when backed by a
+        file). Returns the stored record."""
+        self._records.append(_validate(record))
+        if self.path is not None:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(record) + "\n")
+        return record
+
+    def ingest_many(self, records: Iterable[dict]) -> int:
+        n = 0
+        for r in records:
+            self.ingest(r)
+            n += 1
+        return n
+
+    # ---- producer adapters --------------------------------------------------
+    def ingest_kernel_bench(self, results: dict) -> int:
+        """Ingest `benchmarks.kernel_bench.run()` output (its ``records``
+        list of per-rep kernel measurements)."""
+        return self.ingest_many(results.get("records", []))
+
+    def ingest_dryrun_artifact(self, artifact: dict) -> Optional[dict]:
+        """Ingest one `repro.launch.dryrun` artifact's compiled-HLO counts.
+        Returns the stored record, or None when the artifact carries no
+        usable ``cost_analysis`` (errored dry-run, CPU backend gaps)."""
+        cost = artifact.get("cost_analysis") or {}
+        if "flops" not in cost:
+            return None
+        return self.ingest({
+            "kind": "dryrun",
+            "arch": artifact.get("arch", "?"),
+            "shape": artifact.get("shape", "?"),
+            "mesh": artifact.get("mesh", "?"),
+            "flops": float(cost["flops"]),
+            # XLA reports HBM traffic under "bytes accessed"
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "n_chips": artifact.get("n_chips"),
+        })
+
+    def ingest_step(self, report, signals: Optional[Dict[str, dict]] = None,
+                    extra: Optional[dict] = None) -> dict:
+        """Ingest one `ControlLoop` `StepReport` (plus optional per-stage
+        `SignalSet.as_dict()` snapshots keyed by stage name)."""
+        rec = {
+            "kind": "step",
+            "t_s": float(report.t_s),
+            "load": float(report.load),
+            "temps": {k: float(v) for k, v in report.temps.items()},
+            "powers": {k: float(v) for k, v in report.powers.items()},
+            "energy_j": float(report.energy_j),
+            "inferences": float(report.inferences),
+            "served": bool(report.served),
+            "reannealed": bool(report.reannealed),
+            "throttle_events": int(report.throttle_events),
+            "drift": [ev.kind for ev in report.drift],
+            "excluded": list(report.excluded),
+        }
+        if signals:
+            rec["signals"] = signals
+        if extra:
+            rec.update(extra)
+        return self.ingest(rec)
+
+    # --------------------------------------------------------------- queries
+    def records(self, kind: Optional[str] = None) -> List[dict]:
+        if kind is None:
+            return list(self._records)
+        return [r for r in self._records if r.get("kind") == kind]
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self._records:
+            out[r["kind"]] = out.get(r["kind"], 0) + 1
+        return out
+
+    # ----------------------------------------------------------- persistence
+    def save(self, path: str) -> str:
+        """Write every record as JSONL (full rewrite — for memory-backed
+        stores; file-backed stores persist incrementally on ingest)."""
+        with open(path, "w") as f:
+            for r in self._records:
+                f.write(json.dumps(r) + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TraceStore":
+        """Read-only view of an existing JSONL trace (records validated)."""
+        store = cls()
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    store.ingest(json.loads(line))
+        return store

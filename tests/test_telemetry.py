@@ -1,0 +1,305 @@
+"""Telemetry & calibration subsystem: TraceStore persistence, the
+CalibrationFitter's recovery of known ground truth, identity-profile parity
+with the uncalibrated v2 path, measured-kernel runtime feedback, and the
+signal monotonicity invariants (hypothesis-gated)."""
+import json
+import math
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.paper_models import GPT2_125M
+from repro.core import (Constraints, SafetyMonitor, Workload, decompose,
+                        homogeneous_assignment, plan_costs)
+from repro.core.decomposition import Stage
+from repro.core.devices import EDGE_GPU_NVIDIA, EDGE_NPU, EDGE_PLATFORM
+from repro.qeil2 import (CalibratedSignalProvider, CalibrationFitter,
+                         CalibrationProfile, ControlLoop, LoopConfig,
+                         PGSAMConfig, PGSAMOrchestrator, SignalSet,
+                         TraceStore, cpq_power_factor, phi, signals_for,
+                         synthetic_trace_store)
+from repro.qeil2.runtime.incremental import DeltaEvaluator
+from repro.qeil2.telemetry.fit import COEF_BOUNDS, COEF_DEFAULTS, COEF_NAMES
+from repro.qeil2.telemetry.provider import kernel_for_stage
+from repro.qeil2.telemetry.synthetic import TRUE_COEFFS, TRUE_KERNEL_ETA
+
+TINY = Workload(batch=1, prompt_tokens=32, decode_tokens=32, samples=4)
+HETERO_W = Workload(batch=1, prompt_tokens=128, decode_tokens=256, samples=20)
+UNCONSTRAINED = Constraints(latency_budget_factor=None)
+
+
+# ----------------------------------------------------------------- TraceStore
+
+def test_trace_store_rejects_unknown_kind_and_missing_keys():
+    store = TraceStore()
+    with pytest.raises(ValueError, match="unknown trace record kind"):
+        store.ingest({"kind": "mystery"})
+    with pytest.raises(ValueError, match="missing keys"):
+        store.ingest({"kind": "kernel", "kernel": "flash_attention"})
+    assert len(store) == 0
+
+
+def test_trace_store_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "traces.jsonl")
+    store = TraceStore(path=path)            # file-backed: persists on ingest
+    store.ingest({"kind": "kernel", "kernel": "k", "flops": 1.0, "bytes": 2.0,
+                  "measured_us": 10.0, "roofline_us": 8.0})
+    store.ingest({"kind": "dryrun", "arch": "a", "shape": "s", "flops": 3.0})
+    loaded = TraceStore.load(path)
+    assert len(loaded) == 2
+    assert loaded.counts() == {"kernel": 1, "dryrun": 1}
+    # re-opening the same path resumes from the persisted records
+    resumed = TraceStore(path=path)
+    assert len(resumed) == 2
+
+
+def test_trace_store_ingest_dryrun_artifact_skips_errored():
+    store = TraceStore()
+    assert store.ingest_dryrun_artifact({"cost_analysis": {"error": "x"}}) \
+        is None
+    rec = store.ingest_dryrun_artifact(
+        {"arch": "qwen2-72b", "shape": "train_4k",
+         "cost_analysis": {"flops": 1e12, "bytes accessed": 1e9}})
+    assert rec["flops"] == 1e12 and rec["bytes_accessed"] == 1e9
+
+
+def test_signalset_as_dict_plain_floats():
+    sig = SignalSet(dasi=0.5, msat=1.0, cpq=0.2, phi=0.9)
+    d = sig.as_dict()
+    assert d == {"dasi": 0.5, "msat": 1.0, "cpq": 0.2, "phi": 0.9}
+    json.dumps(d)                            # structured-logging safe
+
+
+# ------------------------------------------------------------ identity parity
+
+def test_identity_provider_bit_identical_v2():
+    """Acceptance: with an identity CalibrationProfile, plan_costs(model='v2')
+    is bit-identical to the providerless path."""
+    stages = decompose(GPT2_125M, HETERO_W)
+    assign = {st.name: EDGE_PLATFORM[i % len(EDGE_PLATFORM)]
+              for i, st in enumerate(stages)}
+    temps = {d.name: 40.0 + 5.0 * i for i, d in enumerate(EDGE_PLATFORM)}
+    base = plan_costs(stages, assign, workload=HETERO_W, model="v2",
+                      temps=temps)
+    ident = plan_costs(stages, assign, workload=HETERO_W, model="v2",
+                       temps=temps,
+                       provider=CalibratedSignalProvider(
+                           CalibrationProfile.identity()))
+    assert base.energy_j == ident.energy_j
+    assert base.makespan_s == ident.makespan_s
+    for a, b in zip(base.executions, ident.executions):
+        assert a.energy_j == b.energy_j and a.time_s == b.time_s
+        assert a.signals == b.signals
+
+
+def test_provider_rejected_on_v1_paths():
+    stages = decompose(GPT2_125M, TINY)
+    assign = homogeneous_assignment(stages, EDGE_GPU_NVIDIA)
+    prov = CalibratedSignalProvider()
+    with pytest.raises(ValueError, match="v2"):
+        plan_costs(stages, assign, workload=TINY, provider=prov)
+    with pytest.raises(ValueError, match="v2"):
+        PGSAMOrchestrator(EDGE_PLATFORM, provider=prov)
+    with pytest.raises(ValueError, match="v2"):
+        DeltaEvaluator(stages, EDGE_PLATFORM, [0] * len(stages),
+                       model="v1", provider=prov)
+
+
+def test_calibration_profile_roundtrip_and_hashable(tmp_path):
+    profile = CalibrationProfile(
+        ridge_scale=0.8, cpq_kappa=0.5, cpq_exp=2.5, phi_rho_ref=0.11,
+        phi_t_slope=18.0, kernel_eta=(("flash_attention", 0.8),),
+        ci=(("ridge_scale", (0.7, 0.9)),), source="fit", n_traces=10)
+    path = str(tmp_path / "profile.json")
+    profile.save(path)
+    loaded = CalibrationProfile.load(path)
+    assert loaded == profile
+    assert hash(loaded) == hash(profile)     # frontier-cache key material
+    assert not profile.is_identity and CalibrationProfile.identity().is_identity
+    assert profile.ci_for("ridge_scale") == (0.7, 0.9)
+    assert profile.eta_for("flash_attention") == 0.8
+    assert profile.eta_for("unmeasured") == 1.0
+
+
+# -------------------------------------------------------------------- fitting
+
+def test_fitter_recovers_ground_truth_with_cis():
+    """Acceptance: on the seeded synthetic fixture the fitted coefficients
+    reduce energy-prediction RMSE vs the documented defaults, land closer to
+    ground truth, and every one carries a bootstrap CI."""
+    store = synthetic_trace_store(seed=0)
+    profile, report = CalibrationFitter(store, n_bootstrap=40, seed=0).fit()
+    assert report.rmse_fitted < report.rmse_default
+    for j, name in enumerate(COEF_NAMES):
+        row = report.coefficients[name]
+        assert abs(row["fitted"] - TRUE_COEFFS[name]) < \
+            abs(COEF_DEFAULTS[j] - TRUE_COEFFS[name])
+        lo, hi = row["ci"]
+        assert math.isfinite(lo) and math.isfinite(hi) and lo <= hi
+    for name, true_eta in TRUE_KERNEL_ETA.items():
+        row = report.kernel_eta[name]
+        assert row["fitted"] == pytest.approx(true_eta, abs=0.05)
+        assert row["ci"][0] <= row["fitted"] <= row["ci"][1]
+    assert profile.source == "fit" and not profile.is_identity
+
+
+def test_fitter_requires_usable_records():
+    with pytest.raises(ValueError, match="no energy or kernel"):
+        CalibrationFitter(TraceStore()).fit()
+
+
+def test_fitter_kernel_only_traces():
+    """Kernel records alone fit the duty factors and leave the coefficient
+    vector at the documented defaults."""
+    store = TraceStore()
+    for rep in range(5):
+        store.ingest({"kind": "kernel", "kernel": "ssd_scan", "rep": rep,
+                      "flops": 1e9, "bytes": 1e7,
+                      "measured_us": 200.0, "roofline_us": 120.0})
+    profile, report = CalibrationFitter(store, n_bootstrap=20, seed=0).fit()
+    assert profile.coefficients() == COEF_DEFAULTS
+    assert profile.eta_for("ssd_scan") == pytest.approx(0.6, abs=1e-9)
+    assert report.n_kernel == 5 and report.n_energy == 0
+
+
+# ----------------------------------------------------------- runtime feedback
+
+def test_kernel_for_stage_mapping():
+    stages = decompose(GPT2_125M, TINY)
+    kernels = {st.name: kernel_for_stage(st) for st in stages}
+    assert kernels["embed"] is None and kernels["lm_head"] is None
+    attn_pre = [k for n, k in kernels.items()
+                if ".attn" in n and n.endswith("prefill")]
+    attn_dec = [k for n, k in kernels.items()
+                if ".attn" in n and n.endswith("decode")]
+    assert attn_pre and set(attn_pre) == {"flash_attention"}
+    assert attn_dec and set(attn_dec) == {"decode_attention"}
+
+
+def test_measured_eta_stretches_time_and_preserves_energy():
+    """Measured kernel time substitutes the roofline: a stage backed by a
+    measured kernel runs 1/eta longer with duty cycles scaled by eta; the
+    dynamic energy stays put (time x activity is invariant)."""
+    from repro.qeil2.energy_v2 import execute_stage_v2
+    profile = CalibrationProfile(kernel_eta=(("decode_attention", 0.5),),
+                                 source="fit")
+    prov = CalibratedSignalProvider(profile)
+    stage = next(st for st in decompose(GPT2_125M, TINY)
+                 if kernel_for_stage(st) == "decode_attention")
+    base = execute_stage_v2(stage, EDGE_GPU_NVIDIA)
+    cal = execute_stage_v2(stage, EDGE_GPU_NVIDIA, provider=prov)
+    assert cal.time_s == pytest.approx(base.time_s * 2.0)
+    assert cal.signals.dasi == pytest.approx(base.signals.dasi * 0.5)
+    assert cal.energy_j == pytest.approx(base.energy_j, rel=1e-9)
+    # an unmeasured stage is untouched
+    embed = next(st for st in decompose(GPT2_125M, TINY)
+                 if st.name == "embed")
+    assert execute_stage_v2(embed, EDGE_GPU_NVIDIA, provider=prov).time_s == \
+        execute_stage_v2(embed, EDGE_GPU_NVIDIA).time_s
+
+
+def test_delta_evaluator_parity_with_provider():
+    """The incremental anneal path agrees with the full plan_costs path under
+    a fitted provider (same 1e-9 contract as the uncalibrated case)."""
+    store = synthetic_trace_store(seed=3, n_energy=120)
+    profile, _ = CalibrationFitter(store, n_bootstrap=0, seed=0).fit()
+    prov = CalibratedSignalProvider(profile)
+    stages = decompose(GPT2_125M, HETERO_W)
+    devices = EDGE_PLATFORM
+    mapping = [i % len(devices) for i in range(len(stages))]
+    temps = {d.name: 35.0 + 10.0 * i for i, d in enumerate(devices)}
+    ev = DeltaEvaluator(stages, devices, mapping, workload=HETERO_W,
+                        model="v2", temps=temps, provider=prov)
+    for si, di in [(0, 2), (5, 3), (len(stages) - 1, 1)]:
+        ev.apply(si, di)
+        assign = {st.name: devices[d]
+                  for st, d in zip(stages, ev.mapping)}
+        full = plan_costs(stages, assign, workload=HETERO_W, model="v2",
+                          temps=temps, provider=prov)
+        e, mk, _ = ev.objectives()
+        assert e == pytest.approx(full.energy_j, rel=1e-9)
+        assert mk == pytest.approx(full.makespan_s, rel=1e-9)
+
+
+def test_pgsam_with_fitted_provider_deterministic():
+    store = synthetic_trace_store(seed=1, n_energy=120)
+    profile, _ = CalibrationFitter(store, n_bootstrap=0, seed=0).fit()
+    prov = CalibratedSignalProvider(profile)
+    runs = []
+    for _ in range(2):
+        orch = PGSAMOrchestrator(
+            EDGE_PLATFORM, UNCONSTRAINED,
+            config=PGSAMConfig(seed=0, iters_max=400),
+            energy_model="v2", provider=prov)
+        a = orch.assign(GPT2_125M, HETERO_W)
+        runs.append((a.energy_j, a.latency_s))
+        assert a.mapping
+    assert runs[0] == runs[1]
+
+
+def test_control_loop_emits_step_records_with_signals():
+    trace = TraceStore()
+    safety = SafetyMonitor(EDGE_PLATFORM)
+    orch = PGSAMOrchestrator(EDGE_PLATFORM, Constraints(latency_sla_s=0.15),
+                             config=PGSAMConfig(seed=0, iters_max=300,
+                                                incremental=True),
+                             energy_model="v2", safety=safety)
+    loop = ControlLoop(orch, safety, GPT2_125M, HETERO_W,
+                       LoopConfig(dt_s=5.0), trace=trace)
+    for _ in range(3):
+        loop.step(load=1.0)
+    steps = trace.records("step")
+    assert len(steps) == 3
+    for rec in steps:
+        assert set(rec["temps"]) == {d.name for d in EDGE_PLATFORM}
+        assert rec["energy_j"] > 0
+        # v2-costed plans carry per-stage signal snapshots
+        assert rec["signals"]
+        for sig in rec["signals"].values():
+            assert set(sig) == {"dasi", "msat", "cpq", "phi"}
+
+
+# ----------------------------------- monotonicity invariants (property-based)
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(0.0, 5.0), st.floats(0.0, 5.0))
+def test_cpq_power_factor_non_decreasing(a, b):
+    lo, hi = sorted((a, b))
+    assert cpq_power_factor(lo) <= cpq_power_factor(hi)
+    assert cpq_power_factor(lo) >= 1.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(-20.0, 150.0), st.floats(-20.0, 150.0))
+def test_phi_non_increasing_in_temperature(a, b):
+    """Thermal yield can only fall as junctions heat (leakage grows
+    monotonically with temperature)."""
+    lo, hi = sorted((a, b))
+    assert phi(lo) >= phi(hi)
+    assert 0.0 < phi(hi) <= 1.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(*COEF_BOUNDS[0]),                   # ridge_scale
+       st.floats(1e-3, 1.0),                         # kernel eta
+       st.floats(1e-2, 1e6))                         # arithmetic intensity
+def test_calibrated_dasi_in_unit_interval(ridge_scale, eta, intensity):
+    """Acceptance invariant: calibrated DASI stays in [0, 1] for any fitted
+    profile within the fit bounds, on every stage/device combination."""
+    profile = CalibrationProfile(
+        ridge_scale=ridge_scale,
+        kernel_eta=(("decode_attention", eta), ("flash_attention", eta),
+                    ("ssd_scan", eta)),
+        source="fit")
+    prov = CalibratedSignalProvider(profile)
+    stage = Stage("layer00.attn+ffn.decode", "decode", 0,
+                  flops=intensity * 1e6, bytes_moved=1e6, param_bytes=1e6,
+                  width=64)
+    for dev in (EDGE_NPU, EDGE_GPU_NVIDIA):
+        d = prov.dasi(stage, dev)
+        m = prov.memory_saturation(stage, dev)
+        assert 0.0 <= d <= 1.0
+        assert 0.0 <= m <= 1.0
+        sig = prov.signals_for(stage, dev)
+        assert sig.dasi == d and sig.msat == m
