@@ -38,6 +38,8 @@ BENCHES = [
     ("pareto_router", "benchmarks.pareto_router", "acceptance_all"),
     ("calibration_report", "benchmarks.calibration_report",
      "acceptance_all"),
+    ("serving_schedule", "benchmarks.serving_schedule",
+     "acceptance_all"),
 ]
 
 

@@ -2,8 +2,11 @@
 task, then serve batched requests with repeated sampling, the quality-
 verification cascade, QEIL orchestration and the safety monitor in the loop.
 
-This is the full QEIL story on real hardware (this container's CPU), with the
-edge-platform profiles driving the placement/energy decisions.
+This is the full QEIL story on real hardware (this container's CPU), with
+the edge-platform profiles driving the placement/energy decisions. Serving
+goes through the scheduler-centric stack (PR 4): requests enter tier-aware
+admission and the continuous-batching scheduler routes each formed batch to
+a shared operating point off the PGSAM archive.
 
 Run: PYTHONPATH=src python examples/serve_heterogeneous.py
 """
@@ -13,11 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Constraints, GreedyOrchestrator, SafetyMonitor,
-                        Workload, run_pass_at_k)
+from repro.core import (Constraints, SafetyMonitor, Workload, run_pass_at_k)
 from repro.core.devices import EDGE_PLATFORM
 from repro.data import ArithGenerator, DataConfig, data_iterator
 from repro.models import ArchConfig, Model
+from repro.qeil2 import (PGSAMConfig, PGSAMOrchestrator, ParetoRouter,
+                         RoutedServingEngine, default_tiers)
 from repro.serving import ServingEngine
 from repro.training import AdamWConfig, train
 
@@ -33,13 +37,19 @@ params, info = train(model, AdamWConfig(lr=3e-3, warmup_steps=10,
                      data_iterator(dc), 150, log_every=50)
 print("  final loss:", round(info["final_loss"], 3))
 
-# --- 2. QEIL plan for the serving workload
-w = Workload(batch=16, prompt_tokens=4, decode_tokens=2, samples=8)
-orch = GreedyOrchestrator(EDGE_PLATFORM,
-                          Constraints(latency_budget_factor=1.0))
-plan = orch.assign(cfg, w)
-print(f"\norchestrator plan: {plan.device_names()}  "
-      f"energy={plan.energy_j * 1e3:.2f} mJ  feasible={plan.feasible}")
+# --- 2. QEIL routing surface for the serving workload: PGSAM archive + SLA
+# tiers; the scheduler will route every formed batch over this frontier
+w = Workload(batch=1, prompt_tokens=4, decode_tokens=2, samples=8)
+orch = PGSAMOrchestrator(EDGE_PLATFORM,
+                         Constraints(latency_budget_factor=None),
+                         config=PGSAMConfig(seed=0, iters_max=800,
+                                            incremental=True))
+placed = [a for a in orch.pareto_frontier(cfg, w) if a.mapping]
+base_lat = min(a.latency_s for a in placed) / 0.9
+router = ParetoRouter(orch, cfg, w, tiers=default_tiers(base_lat))
+plan = router.route("standard").assignment
+print(f"\nrouting surface: {len(placed)} operating points; standard tier "
+      f"-> {plan.device_names()}  energy={plan.energy_j * 1e3:.2f} mJ")
 
 # --- 3. safety monitor vets requests
 safety = SafetyMonitor(EDGE_PLATFORM, max_seq_len=64, vocab_size=16)
@@ -58,9 +68,17 @@ for _ in range(16):
         tasks.append((prompt, lambda s, a=answer: gen.verify(s, a)))
 print(f"safety: {rejected}/2 attacks blocked, {len(tasks)} legit requests in")
 
-# --- 4. repeated sampling + verification cascade
+# --- 4. repeated sampling + verification cascade, served through the
+# scheduler: the shim turns the pass@k driver's one generate call into
+# admission -> batching -> backend (one batch per prompt-length bucket,
+# placed at the standard tier's shared operating point)
 engine = ServingEngine(model, params, max_new_tokens=2, temperature=1.0)
-res = run_pass_at_k(engine, tasks, n_samples=8, budgets=(1, 2, 4, 8))
+routed = RoutedServingEngine(engine, router, default_tier="standard")
+res = run_pass_at_k(routed, tasks, n_samples=8, budgets=(1, 2, 4, 8))
+for rec in routed.scheduler.records:
+    print(f"scheduler batch {rec.batch_id}: {rec.n_requests} req "
+          f"{rec.tier_mix} -> point {rec.point_index} "
+          f"E={rec.energy_j * 1e3:.2f} mJ T={rec.latency_s * 1e3:.2f} ms")
 print("\npass@k coverage:", {k: round(v, 3)
                              for k, v in res.coverage_by_k.items()})
 print(f"verification cascade: {res.cascade.exact_checked}/"

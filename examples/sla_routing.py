@@ -49,3 +49,26 @@ for name in ("interactive", "standard", "economy"):
 distinct = {router.route(t.name).point_index for t in tiers}
 print(f"\n{len(tiers)} tiers -> {len(distinct)} distinct operating points "
       f"(the frontier is a routing surface, not a single plan)")
+
+# --- batch-aware routing (PR 4): the continuous-batching scheduler routes a
+# mixed-tier batch to ONE shared operating point. Caps merge to the tightest
+# member tier, every archive point is re-costed under the batch workload
+# (decode re-streams weights once per token regardless of batch size, so
+# batching amortizes), and the batch energy is attributed back per tier.
+print("\nbatch-aware routing (shared operating point per mixed-tier batch):")
+for members in (["interactive"], ["interactive", "standard", "economy"],
+                ["standard"] * 2 + ["economy"] * 6):
+    d = router.route_batch(members)
+    per_req = d.energy_j / d.n_requests
+    attrib = {t: round(e, 2) for t, e in sorted(d.per_tier_energy_j.items())}
+    print(f"  {len(members)} req {d.tier.name:<30} -> point {d.point_index:2d}"
+          f" T={d.latency_s * 1e3:7.1f} ms E/req={per_req:6.2f} J"
+          f" caps={d.meets_caps}  attribution {attrib}")
+
+one = router.recost(router.route("economy").assignment,
+                    router.batch_workload(1))
+eight = router.recost(router.route("economy").assignment,
+                      router.batch_workload(8))
+print(f"\namortization at the economy point: batch of 8 costs "
+      f"{eight.energy_j / (8 * one.energy_j):.0%} of 8x a batch of 1 "
+      f"(weight re-streaming is batch-invariant)")

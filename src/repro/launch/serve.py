@@ -4,10 +4,13 @@ orchestration + safety monitoring in the loop.
   PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-3b-a800m \
       --smoke --requests 8 --samples 4
 
-``--router`` replaces the one-shot greedy plan with the Pareto-routed
-runtime: a PGSAM anneal builds the non-dominated archive once, and each
-``generate`` call is placed at the operating point its SLA tier scalarizes
-out of the archive (`repro.qeil2.runtime`).
+``--router`` replaces the one-shot greedy plan with the scheduler-centric
+runtime: a PGSAM anneal builds the non-dominated archive once, requests
+enter tier-aware admission, and the continuous-batching scheduler forms
+(optionally mixed-tier, with ``--mixed``) batches routed to shared
+operating points off the archive (`repro.serving.scheduler` +
+`repro.qeil2.runtime`). Without ``--router`` the v1 blocking engine path
+runs unchanged as the baseline.
 """
 from __future__ import annotations
 
@@ -34,11 +37,16 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--router", action="store_true",
-                    help="frontier-driven placement per request tier "
-                         "(PGSAM archive + SLA router)")
+                    help="scheduler-centric serving: tier-aware admission "
+                         "+ continuous batching over the PGSAM archive")
     ap.add_argument("--tier", default="standard",
                     choices=["interactive", "standard", "economy"],
-                    help="SLA tier to serve this batch under (--router)")
+                    help="SLA tier to serve requests under (--router)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="round-robin requests over all three tiers so "
+                         "batches mix tiers (--router)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="scheduler batch size bound (--router)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -110,13 +118,31 @@ def main() -> None:
     engine = ServingEngine(model, params, max_new_tokens=args.max_new)
     t0 = time.perf_counter()
     if router is not None:
-        from repro.qeil2 import RoutedServingEngine
-        routed = RoutedServingEngine(engine, router, default_tier=args.tier)
-        results = routed.generate(prompts, n_samples=args.samples,
-                                  extras=extras)
-        d = routed.decisions[-1]
-        print(f"[router] generate placed at point {d.point_index} "
-              f"({d.tier.name}): {d.assignment.device_names()}")
+        from repro.serving import ContinuousBatchingScheduler, SchedulerConfig
+        sched = ContinuousBatchingScheduler(
+            engine.backend, router,
+            SchedulerConfig(max_batch_requests=args.max_batch,
+                            max_new_tokens=args.max_new))
+        tiers = (["interactive", "standard", "economy"] if args.mixed
+                 else [args.tier])
+        ids = []
+        for i, p in enumerate(prompts):
+            row = {k: np.asarray(v)[i] for k, v in extras.items()} or None
+            adm = sched.submit(p, tier=tiers[i % len(tiers)],
+                               n_samples=args.samples, extras=row)
+            if adm.admitted:
+                ids.append(adm.request_id)
+            else:
+                print(f"[admission] rejected request {i}: {adm.reason}")
+        done = sched.run_until_idle()
+        for rec in sched.records:
+            print(f"[scheduler] batch {rec.batch_id}: "
+                  f"{rec.n_requests} req ({rec.tier_mix}) -> point "
+                  f"{rec.point_index} E={rec.energy_j * 1e3:.2f} mJ "
+                  f"T={rec.latency_s * 1e3:.2f} ms "
+                  f"queue={rec.queue_delay_s * 1e3:.2f} ms "
+                  f"caps_met={rec.meets_caps}")
+        results = [done[i].result for i in ids]
     else:
         results = engine.generate(prompts, n_samples=args.samples,
                                   extras=extras)

@@ -14,9 +14,10 @@ from repro.qeil2.energy_v2 import (StageExecutionV2, execute_stage_v2,
                                    plan_costs_v2, W_COMPUTE, W_MEMORY)
 from repro.qeil2.pgsam import (ArchiveEntry, PGSAM, PGSAMConfig,
                                PGSAMOrchestrator, PGSAMResult)
-from repro.qeil2.runtime import (ControlLoop, DeltaEvaluator, LoopConfig,
-                                 ParetoRouter, RoutedServingEngine,
-                                 RoutingDecision, SLATier, default_tiers)
+from repro.qeil2.runtime import (BatchRoutingDecision, ControlLoop,
+                                 DeltaEvaluator, LoopConfig, ParetoRouter,
+                                 RoutedServingEngine, RoutingDecision,
+                                 SLATier, default_tiers, merge_tiers)
 from repro.qeil2.telemetry import (CalibratedSignalProvider,
                                    CalibrationFitter, CalibrationProfile,
                                    ResidualReport, TraceStore,

@@ -7,8 +7,9 @@ control_loop — ControlLoop: orchestrate -> execute -> heat -> re-orchestrate
                with drift-triggered, archive-warm-started re-anneals
 """
 from repro.qeil2.runtime.incremental import DeltaEvaluator, UndoToken
-from repro.qeil2.runtime.router import (ParetoRouter, RoutedServingEngine,
+from repro.qeil2.runtime.router import (BatchRoutingDecision, ParetoRouter,
+                                        RoutedServingEngine,
                                         RoutingDecision, SLATier,
-                                        default_tiers)
+                                        default_tiers, merge_tiers)
 from repro.qeil2.runtime.control_loop import (ControlLoop, LoopConfig,
                                               StepReport)

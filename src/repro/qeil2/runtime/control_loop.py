@@ -73,18 +73,23 @@ class ControlLoop:
     API; the re-anneal fast path and frontier bookkeeping light up when it
     also exposes `PGSAMOrchestrator`'s ``reanneal`` / ``pareto_frontier``.
     An attached `ParetoRouter` (``router=``) is kept in sync with the
-    healthy-device set so tier routing follows the loop's world view.
+    healthy-device set so tier routing follows the loop's world view; an
+    attached `repro.serving.ContinuousBatchingScheduler` (``scheduler=``)
+    is notified after every drift-triggered re-anneal so the new frontier
+    takes effect at the next batch *boundary* — in-flight batches finish on
+    the operating point they were priced against.
     """
 
     def __init__(self, orchestrator, safety: SafetyMonitor, cfg: ArchConfig,
                  workload: Workload, loop: LoopConfig = LoopConfig(),
-                 router=None, trace=None):
+                 router=None, trace=None, scheduler=None):
         self.orch = orchestrator
         self.safety = safety
         self.cfg = cfg
         self.workload = workload
         self.loop = loop
         self.router = router
+        self.scheduler = scheduler
         # optional repro.qeil2.telemetry.TraceStore: every step emits one
         # execution record (temps/powers/energy + per-stage SignalSet
         # snapshots when the plan was v2-costed) — the runtime's side of the
@@ -120,6 +125,13 @@ class ControlLoop:
         if self.router is not None:
             self.router.set_healthy(self.allowed_devices())
 
+    def _notify_scheduler(self, warm: bool) -> None:
+        # drift re-anneal boundary: the router's healthy set / epoch moved,
+        # so the scheduler's next *formed* batch re-routes on the post-drift
+        # frontier (routing only ever happens at batch formation)
+        if warm and self.scheduler is not None:
+            self.scheduler.on_reorchestrate(healthy=self.allowed_devices())
+
     def _orchestrate(self, warm: bool) -> None:
         allowed = self.allowed_devices()
         t0 = time.perf_counter()
@@ -152,6 +164,7 @@ class ControlLoop:
             self._archive = [self.assignment]
         self.reanneal_wall_s += time.perf_counter() - t0
         self._sync_router()
+        self._notify_scheduler(warm)
 
     # ------------------------------------------------------------- physics
     def _hw_speed(self) -> float:

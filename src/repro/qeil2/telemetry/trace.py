@@ -20,6 +20,11 @@ open calibration items describe:
 * ``dryrun`` — compiled-HLO FLOP/byte counts from `repro.launch.dryrun`'s
   ``compiled.cost_analysis()``, cross-checking the analytic decomposition
   counts the energy records are built from.
+* ``serve`` — per-batch step records from the continuous-batching scheduler
+  (`repro.serving.scheduler`): tier mix, queue delay, the routed operating
+  point, batch energy/makespan, and per-stage `SignalSet.as_dict()`
+  snapshots of the batch-workload costing — serving traces feed the same
+  `CalibrationFitter` as control-loop step records.
 
 Records are plain dicts (JSON-serializable); `ingest` validates the minimal
 per-kind schema so a malformed producer fails at the boundary, not inside the
@@ -38,6 +43,8 @@ _SCHEMAS: Dict[str, tuple] = {
                "t_s", "p0_w", "quant_f", "energy_j"),
     "step": ("t_s", "temps", "powers", "energy_j"),
     "dryrun": ("arch", "shape", "flops"),
+    "serve": ("t_s", "bucket", "tier_mix", "queue_delay_s", "point_index",
+              "energy_j", "latency_s"),
 }
 
 
@@ -131,6 +138,31 @@ class TraceStore:
             "throttle_events": int(report.throttle_events),
             "drift": [ev.kind for ev in report.drift],
             "excluded": list(report.excluded),
+        }
+        if signals:
+            rec["signals"] = signals
+        if extra:
+            rec.update(extra)
+        return self.ingest(rec)
+
+    def ingest_serve(self, record, signals: Optional[Dict[str, dict]] = None,
+                     extra: Optional[dict] = None) -> dict:
+        """Ingest one scheduler `BatchRecord` (plus optional per-stage
+        `SignalSet.as_dict()` snapshots of the batch-workload costing)."""
+        rec = {
+            "kind": "serve",
+            "t_s": float(record.t_s),
+            "batch_id": int(record.batch_id),
+            "bucket": int(record.bucket),
+            "n_requests": int(record.n_requests),
+            "n_sequences": int(record.n_sequences),
+            "tier_mix": {k: int(v) for k, v in record.tier_mix.items()},
+            "queue_delay_s": float(record.queue_delay_s),
+            "point_index": int(record.point_index),
+            "energy_j": float(record.energy_j),
+            "latency_s": float(record.latency_s),
+            "meets_caps": bool(record.meets_caps),
+            "reroute": bool(record.reroute),
         }
         if signals:
             rec["signals"] = signals

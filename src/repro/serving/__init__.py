@@ -1,3 +1,13 @@
-from repro.serving.engine import GenerationResult, ServingEngine
+from repro.serving.backend import (ExecutionBackend, GenerationResult,
+                                   InFlightBatch, bucket_key)
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import (AdmissionResult, BatchRecord,
+                                     CompletedRequest,
+                                     ContinuousBatchingScheduler,
+                                     RequestQueue, SchedulerConfig,
+                                     ServeRequest)
 
-__all__ = ["ServingEngine", "GenerationResult"]
+__all__ = ["ServingEngine", "GenerationResult", "ExecutionBackend",
+           "InFlightBatch", "bucket_key", "ContinuousBatchingScheduler",
+           "RequestQueue", "SchedulerConfig", "ServeRequest",
+           "AdmissionResult", "BatchRecord", "CompletedRequest"]

@@ -1,0 +1,236 @@
+"""Execution backend: the *how* of serving, as a stepwise batch API.
+
+Extracted from the original monolithic ``ServingEngine.generate`` so a
+scheduler can interleave work across batches instead of blocking on one
+call. The backend owns the jitted prefill/decode functions, the KV-cache
+slot budget, and static-shape bucketing; policy (admission, batch
+formation, routing) lives in `repro.serving.scheduler`.
+
+The step API is deliberately small:
+
+* ``start_batch`` — prefill a group of equal-length prompts (each tiled by
+  its per-request sample count) and sample the first token; returns an
+  `InFlightBatch` holding the KV cache and the rng stream.
+* ``decode_step`` — advance an in-flight batch by one autoregressive token.
+* ``finalize`` — stack the sampled tokens into per-request
+  `GenerationResult`s and release the batch's KV slots.
+
+Running ``start_batch`` + ``decode_step`` until done + ``finalize`` is
+bit-identical to the pre-refactor monolith (same rng split sequence, same
+jitted functions) — `ServingEngine.generate` is now exactly that loop, and
+the parity test in ``tests/test_serving_scheduler.py`` pins it.
+
+Batches are formed within a *bucket*: prompts of one length (the static
+shape the jit specializes on) with one max-new-tokens horizon and one
+temperature. ``bucket_key`` is the canonical key; the scheduler never mixes
+buckets inside a batch.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class GenerationResult:
+    prompt: np.ndarray
+    samples: List[np.ndarray]          # n_samples completions (token arrays)
+    logprobs: List[float]              # mean per-token logprob per sample
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+
+@dataclass
+class InFlightBatch:
+    """One prefilled batch mid-decode: the unit the scheduler interleaves."""
+    prompts: List[np.ndarray]
+    repeats: List[int]                 # samples per prompt (KV slots held)
+    plen: int
+    max_new: int
+    temperature: float
+    rng: jax.Array                     # stream state: split once per token
+    extras: Dict[str, jax.Array]       # already tiled to sequence count
+    cache: Any
+    tok: jax.Array                     # last sampled token (B,) or (B, K)
+    step: int                          # tokens sampled so far (>= 1)
+    out_toks: List[np.ndarray] = field(default_factory=list)
+    out_lps: List[np.ndarray] = field(default_factory=list)
+
+    @property
+    def n_sequences(self) -> int:
+        return sum(self.repeats)
+
+    @property
+    def done(self) -> bool:
+        return self.step >= self.max_new
+
+
+def bucket_key(prompt: np.ndarray, max_new: int,
+               temperature: float) -> Tuple[int, int, float]:
+    """Static-shape bucket: batches may only group requests that share the
+    prompt length (the jit's shape key), decode horizon and temperature."""
+    return (len(prompt), max_new, float(temperature))
+
+
+class ExecutionBackend:
+    """Owns model execution state: jitted step functions, KV slot budget,
+    placement history. ``max_slots`` bounds the number of concurrently
+    resident sequences (prompt x samples rows); ``None`` means unbounded
+    (the original engine's behaviour)."""
+
+    def __init__(self, model: Model, params, eos_token: Optional[int] = None,
+                 max_slots: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.eos_token = eos_token
+        self.max_slots = max_slots
+        self.slots_in_use = 0
+        # placement hook state (the orchestrator's simulated stage->device
+        # plan for whatever is being executed): the scheduler notes the
+        # routed operating point per batch; the legacy engine notes its
+        # placement_provider's answer per generate call. Bounded history —
+        # a long-lived server must not grow linearly with request count.
+        self.last_placement = None
+        self.placements: Deque = deque(maxlen=256)
+        self._prefill_jit = jax.jit(self._prefill)
+        self._decode_jit = jax.jit(self._decode_step)
+
+    # ------------------------------------------------------------------ jitted
+    def _prefill(self, params, tokens, cache, extras):
+        batch = {"tokens": tokens, **extras}
+        logits, cache, _ = self.model.forward(params, batch, cache)
+        return logits[:, -1], cache
+
+    def _decode_step(self, params, tok, pos, cache, rng, temperature, extras):
+        b = {"tokens": tok, "positions": pos, **extras}
+        logits, cache, _ = self.model.forward(params, b, cache)
+        logits = logits[:, 0].astype(jnp.float32)          # (B, V) or (B, K, V)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        sample = jax.random.categorical(rng, logits / temperature, axis=-1)
+        chosen_logp = jnp.take_along_axis(logp, sample[..., None],
+                                          axis=-1)[..., 0]
+        return sample, chosen_logp, cache
+
+    # ---------------------------------------------------------------- plumbing
+    @property
+    def slots_free(self) -> Optional[int]:
+        """Remaining KV slot budget (None = unbounded)."""
+        if self.max_slots is None:
+            return None
+        return self.max_slots - self.slots_in_use
+
+    def note_placement(self, placement) -> None:
+        self.last_placement = placement
+        self.placements.append(placement)
+
+    @property
+    def _multi_codebook(self) -> bool:
+        return self.model.cfg.n_codebooks > 1
+
+    # ---------------------------------------------------------------- step API
+    def start_batch(self, prompts: Sequence[np.ndarray],
+                    n_samples: Union[int, Sequence[int]], max_new: int,
+                    temperature: float, rng: jax.Array,
+                    extras: Optional[Dict] = None) -> InFlightBatch:
+        """Prefill equal-length prompts and sample the first token.
+
+        ``n_samples`` may be a single count or one per prompt (mixed-tier
+        batches can carry different coverage floors). ``extras`` values are
+        per-prompt rows, tiled to the sequence count here.
+        """
+        extras = extras or {}
+        mc = self._multi_codebook
+        repeats = ([int(n_samples)] * len(prompts)
+                   if isinstance(n_samples, int) else
+                   [int(n) for n in n_samples])
+        plen = len(prompts[0])
+        if any(len(p) != plen for p in prompts):
+            raise ValueError("start_batch requires equal-length prompts "
+                             "(one static-shape bucket)")
+        uniform = len(set(repeats)) == 1
+        rep: Union[int, np.ndarray] = \
+            repeats[0] if uniform else np.asarray(repeats)
+        base = np.stack(list(prompts))                      # (R, L[,K])
+        tokens = np.repeat(base, rep, axis=0)               # (B, L[,K])
+        B = tokens.shape[0]
+        if self.max_slots is not None and \
+                self.slots_in_use + B > self.max_slots:
+            raise RuntimeError(
+                f"KV slot budget exceeded: {self.slots_in_use}+{B} > "
+                f"{self.max_slots} (scheduler must check slots_free)")
+        tiled_extras = {k: jnp.repeat(jnp.asarray(v), rep, axis=0)
+                        for k, v in extras.items()}
+
+        cache = self.model.init_cache(B, plen + max_new)
+        last_logits, cache = self._prefill_jit(
+            self.params, jnp.asarray(tokens), cache, tiled_extras)
+
+        # first sampled token comes from the prefill logits
+        rng, sub = jax.random.split(rng)
+        lf = last_logits.astype(jnp.float32)
+        logp0 = jax.nn.log_softmax(lf, axis=-1)
+        tok = jax.random.categorical(sub, lf / temperature, axis=-1)
+        lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
+
+        self.slots_in_use += B
+        return InFlightBatch(
+            prompts=list(prompts), repeats=repeats, plen=plen,
+            max_new=max_new, temperature=temperature, rng=rng,
+            extras=tiled_extras, cache=cache, tok=tok, step=1,
+            out_toks=[np.asarray(tok)],
+            out_lps=[np.asarray(lp if not mc else lp.mean(-1))])
+
+    def decode_step(self, h: InFlightBatch) -> bool:
+        """Advance one token; returns True while the batch still has decode
+        steps left (so ``while backend.decode_step(h): pass`` drains it)."""
+        if h.done:
+            return False
+        mc = self._multi_codebook
+        B = h.n_sequences
+        h.rng, sub = jax.random.split(h.rng)
+        pos = jnp.full((B, 1), h.plen + h.step - 1, jnp.int32)
+        if self.model.cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+        tok_in = h.tok[:, None] if not mc else h.tok[:, None, :]
+        h.tok, lp, h.cache = self._decode_jit(
+            self.params, tok_in, pos, h.cache, sub, h.temperature, h.extras)
+        h.out_toks.append(np.asarray(h.tok))
+        h.out_lps.append(np.asarray(lp if not mc else lp.mean(-1)))
+        h.step += 1
+        return not h.done
+
+    def finalize(self, h: InFlightBatch) -> List[GenerationResult]:
+        """Stack per-step samples into per-request results and release the
+        batch's KV slots."""
+        mc = self._multi_codebook
+        toks = np.stack(h.out_toks, axis=1)                 # (B, T[,K])
+        lps = np.stack(h.out_lps, axis=1)                   # (B, T)
+        results = []
+        offset = 0
+        for prompt, ns in zip(h.prompts, h.repeats):
+            sl = slice(offset, offset + ns)
+            offset += ns
+            samples = [toks[i] for i in range(sl.start, sl.stop)]
+            if self.eos_token is not None and not mc:
+                samples = [self._truncate(s) for s in samples]
+            results.append(GenerationResult(
+                prompt=prompt,
+                samples=samples,
+                logprobs=[float(lps[i].mean())
+                          for i in range(sl.start, sl.stop)],
+                prefill_tokens=h.plen,
+                decode_tokens=int(np.prod(toks.shape[1:2])) * ns,
+            ))
+        self.slots_in_use -= h.n_sequences
+        return results
+
+    def _truncate(self, sample: np.ndarray) -> np.ndarray:
+        hits = np.nonzero(sample == self.eos_token)[0]
+        return sample[: hits[0]] if hits.size else sample

@@ -1,42 +1,35 @@
 """Serving engine: batched prefill + autoregressive decode with KV caches.
 
-This is the substrate under the paper's repeated-sampling experiments: the engine
-prefills a batch of prompts once, then runs jitted single-token decode steps. The
-QEIL orchestrator (repro.core.orchestrator) decides *where* prefill and decode run
-(device profiles / mesh slices); the engine is the *how*.
+This is the substrate under the paper's repeated-sampling experiments. Since
+the scheduler refactor the engine is a thin *blocking* loop over
+`repro.serving.backend.ExecutionBackend`: one ``generate`` call groups its
+prompts by length, runs each group start-to-finish through the backend's
+step API, and returns. The QEIL orchestrator (repro.core.orchestrator)
+decides *where* prefill and decode run (device profiles / mesh slices); the
+backend is the *how*; mixed-tier continuous batching across calls lives in
+`repro.serving.scheduler.ContinuousBatchingScheduler`.
 
-Requests inside one ``generate`` call are grouped by prompt length (static-shape
-jit); repeated sampling tiles each prompt ``n_samples`` times so all samples of a
-request decode in one batch — the batched-inference pattern the paper assumes when
-it amortizes prefill energy across samples.
+Requests inside one ``generate`` call are grouped by prompt length (static-
+shape jit); repeated sampling tiles each prompt ``n_samples`` times so all
+samples of a request decode in one batch — the batched-inference pattern the
+paper assumes when it amortizes prefill energy across samples.
 """
 from __future__ import annotations
 
-import functools
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-
-
-@dataclass
-class GenerationResult:
-    prompt: np.ndarray
-    samples: List[np.ndarray]          # n_samples completions (token arrays)
-    logprobs: List[float]              # mean per-token logprob per sample
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
+from repro.serving.backend import ExecutionBackend, GenerationResult
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, max_new_tokens: int = 32,
                  temperature: float = 0.8, eos_token: Optional[int] = None,
-                 placement_provider: Optional[Callable] = None):
+                 placement_provider: Optional[Callable] = None,
+                 backend: Optional[ExecutionBackend] = None):
         self.model = model
         self.params = params
         self.max_new_tokens = max_new_tokens
@@ -46,34 +39,22 @@ class ServingEngine:
         # n_samples) and returns the orchestrator's operating point for the
         # call (an Assignment, or None). The QEIL split of labor: the
         # orchestrator decides *where* (simulated stage->device plan), the
-        # engine the *how* — this hook is what lets the plan be chosen
-        # per-call from a live Pareto frontier
-        # (`repro.qeil2.runtime.RoutedServingEngine`) instead of once at
-        # startup. The engine records it; execution itself runs on whatever
-        # accelerator JAX sees.
+        # engine the *how*. Scheduler-driven serving routes per *batch*
+        # instead (the scheduler notes decisions on the backend directly);
+        # this per-call hook remains for direct engine use.
         self.placement_provider = placement_provider
-        self.last_placement = None
-        # bounded history: each entry holds a full plan (per-stage costs);
-        # a long-lived server must not grow linearly with request count
-        self.placements: Deque = deque(maxlen=256)
-        self._prefill_jit = jax.jit(self._prefill)
-        self._decode_jit = jax.jit(self._decode_step)
+        self.backend = backend if backend is not None else \
+            ExecutionBackend(model, params, eos_token=eos_token)
 
-    # ------------------------------------------------------------------ jitted
-    def _prefill(self, params, tokens, cache, extras):
-        batch = {"tokens": tokens, **extras}
-        logits, cache, _ = self.model.forward(params, batch, cache)
-        return logits[:, -1], cache
+    # placement history lives on the backend so scheduler-driven and
+    # call-driven serving share one record; these views keep the old API.
+    @property
+    def last_placement(self):
+        return self.backend.last_placement
 
-    def _decode_step(self, params, tok, pos, cache, rng, temperature, extras):
-        b = {"tokens": tok, "positions": pos, **extras}
-        logits, cache, _ = self.model.forward(params, b, cache)
-        logits = logits[:, 0].astype(jnp.float32)          # (B, V) or (B, K, V)
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        sample = jax.random.categorical(rng, logits / temperature, axis=-1)
-        chosen_logp = jnp.take_along_axis(logp, sample[..., None],
-                                          axis=-1)[..., 0]
-        return sample, chosen_logp, cache
+    @property
+    def placements(self):
+        return self.backend.placements
 
     # ------------------------------------------------------------------ public
     def generate(self, prompts: Sequence[np.ndarray], n_samples: int = 1,
@@ -88,9 +69,8 @@ class ServingEngine:
         extras = extras or {}
 
         if self.placement_provider is not None:
-            self.last_placement = self.placement_provider(len(prompts),
-                                                          n_samples)
-            self.placements.append(self.last_placement)
+            self.backend.note_placement(
+                self.placement_provider(len(prompts), n_samples))
 
         results: List[Optional[GenerationResult]] = [None] * len(prompts)
         by_len: Dict[int, List[int]] = {}
@@ -99,66 +79,11 @@ class ServingEngine:
 
         for plen, idxs in by_len.items():
             rng, sub = jax.random.split(rng)
-            group = [prompts[i] for i in idxs]
-            group_res = self._generate_equal_len(group, n_samples, max_new,
-                                                 temp, sub, extras)
-            for i, r in zip(idxs, group_res):
+            h = self.backend.start_batch([prompts[i] for i in idxs],
+                                         n_samples, max_new, temp, sub,
+                                         extras)
+            while self.backend.decode_step(h):
+                pass
+            for i, r in zip(idxs, self.backend.finalize(h)):
                 results[i] = r
         return results  # type: ignore[return-value]
-
-    def _generate_equal_len(self, prompts, n_samples, max_new, temp, rng,
-                            extras) -> List[GenerationResult]:
-        mc = self.model.cfg.n_codebooks > 1
-        plen = len(prompts[0])
-        base = np.stack(prompts)                            # (R, L[,K])
-        tokens = np.repeat(base, n_samples, axis=0)         # (R*S, L[,K])
-        B = tokens.shape[0]
-        tiled_extras = {k: jnp.repeat(jnp.asarray(v), n_samples, axis=0)
-                        for k, v in extras.items()}
-
-        cache = self.model.init_cache(B, plen + max_new)
-        last_logits, cache = self._prefill_jit(
-            self.params, jnp.asarray(tokens), cache, tiled_extras)
-
-        # first sampled token comes from the prefill logits
-        rng, sub = jax.random.split(rng)
-        lf = last_logits.astype(jnp.float32)
-        logp0 = jax.nn.log_softmax(lf, axis=-1)
-        tok = jax.random.categorical(sub, lf / temp, axis=-1)
-        lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
-
-        out_toks = [np.asarray(tok)]
-        out_lps = [np.asarray(lp if not mc else lp.mean(-1))]
-        for t in range(1, max_new):
-            rng, sub = jax.random.split(rng)
-            pos = jnp.full((B, 1), plen + t - 1, jnp.int32)
-            if self.model.cfg.mrope_sections:
-                pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
-            tok_in = tok[:, None] if not mc else tok[:, None, :]
-            tok, lp, cache = self._decode_jit(self.params, tok_in, pos, cache,
-                                              sub, temp, tiled_extras)
-            out_toks.append(np.asarray(tok))
-            out_lps.append(np.asarray(lp if not mc else lp.mean(-1)))
-
-        toks = np.stack(out_toks, axis=1)                   # (B, T[,K])
-        lps = np.stack(out_lps, axis=1)                     # (B, T)
-
-        results = []
-        for r in range(len(prompts)):
-            sl = slice(r * n_samples, (r + 1) * n_samples)
-            samples = [toks[i] for i in range(sl.start, sl.stop)]
-            if self.eos_token is not None and not mc:
-                samples = [self._truncate(s) for s in samples]
-            results.append(GenerationResult(
-                prompt=prompts[r],
-                samples=samples,
-                logprobs=[float(lps[i].mean())
-                          for i in range(sl.start, sl.stop)],
-                prefill_tokens=plen,
-                decode_tokens=int(np.prod(toks.shape[1:2])) * n_samples,
-            ))
-        return results
-
-    def _truncate(self, sample: np.ndarray) -> np.ndarray:
-        hits = np.nonzero(sample == self.eos_token)[0]
-        return sample[: hits[0]] if hits.size else sample

@@ -1,0 +1,483 @@
+"""Scheduler-centric serving: admission -> mixed-tier batching -> backend.
+
+The pre-refactor serving stack picked one operating point per blocking
+``generate`` call, so mixed-tier request streams serialized and prefill /
+weight-streaming energy was never amortized across tiers. This module is the
+policy layer that closes that gap:
+
+* ``RequestQueue`` — tier-aware admission control: unknown tiers are
+  rejected at the door, per-tier queue depth is bounded, and a tier's
+  coverage floor (``SLATier.min_quality``) raises the request's sampling
+  budget on admission. Admitted requests wait in per-bucket FIFO order
+  (bucket = prompt length x decode horizon x temperature — the static
+  shapes the backend jits on).
+* ``ContinuousBatchingScheduler`` — forms mixed-tier batches from the
+  oldest bucket, routes each batch to ONE shared operating point via the
+  router's batch-aware ``route_batch`` (caps merge to the tightest member
+  tier; every frontier point is re-costed under the batch workload, so
+  decode weight-streaming amortization is priced in), and interleaves
+  prefill of new batches with decode steps of in-flight ones. Batches
+  shrink until the merged caps are satisfiable whenever the frontier admits
+  any feasible point at that size — a tight-SLA member caps how much
+  batching its batch can absorb instead of silently blowing its cap.
+
+Routing happens only at batch *formation*: a drift-triggered re-anneal
+(`ControlLoop` calls ``on_reorchestrate``) therefore takes effect at the
+next batch boundary — in-flight batches finish on the plan they were priced
+against.
+
+Simulated time: placement is the orchestrator's simulated stage->device
+plan, so service time is simulated too (execution itself runs on whatever
+accelerator JAX sees). Batches serialize on one simulated pipeline: a batch
+formed at clock ``t`` starts at ``max(t, pipeline_free_t)`` and occupies the
+pipeline for its re-costed makespan. Per-request queue delay and latency in
+`CompletedRequest` are in this simulated clock, which is what the SLA caps
+and `benchmarks/serving_schedule.py` measure. The real decode interleaving
+across in-flight batches exists so wall-clock work overlaps; it does not
+change simulated accounting.
+
+The backend is duck-typed (``start_batch`` / ``decode_step`` / ``finalize``
+/ ``slots_free`` / ``note_placement``), so pure scheduling-policy tests run
+against a stub without touching JAX; the router likewise only needs
+``route_batch`` / ``resolve_tier`` / ``required_samples``.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.backend import bucket_key as _default_bucket_key
+
+
+@dataclass
+class ServeRequest:
+    id: int
+    prompt: np.ndarray
+    tier: Any                          # resolved SLATier
+    n_samples: int
+    max_new_tokens: int
+    temperature: float
+    rng: Optional[Any] = None          # jax PRNG key (single-request parity)
+    extras: Optional[Dict[str, np.ndarray]] = None   # per-request rows
+    arrival_s: float = 0.0
+    seq: int = 0                       # admission order (FIFO key)
+
+    @property
+    def tier_name(self) -> str:
+        return self.tier.name
+
+
+@dataclass
+class AdmissionResult:
+    admitted: bool
+    request_id: Optional[int] = None
+    reason: str = ""
+    raised_samples: Optional[int] = None   # coverage floor raised the budget
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch_requests: int = 8        # requests per formed batch
+    max_inflight_batches: int = 2      # prefill/decode interleave width
+    max_queue_depth: Optional[int] = 256   # per-tier admission bound
+    max_new_tokens: int = 32           # defaults mirror ServingEngine
+    temperature: float = 0.8
+    seed: int = 0                      # batch rng stream (multi-request)
+    respect_caps: bool = True          # shrink batches to keep caps feasible
+
+
+@dataclass(eq=False)
+class BatchRecord:
+    """One formed batch — the scheduler's telemetry unit (`TraceStore`
+    kind ``"serve"`` via `ingest_serve`)."""
+    batch_id: int
+    t_s: float                         # simulated service start
+    bucket: int                        # prompt length
+    n_requests: int
+    n_sequences: int
+    tier_mix: Dict[str, int]
+    queue_delay_s: float               # max member wait before service
+    point_index: int
+    energy_j: float                    # batch energy at the routed point
+    latency_s: float                   # batch service makespan
+    meets_caps: bool
+    reroute: bool                      # first batch after a re-anneal
+
+
+@dataclass(eq=False)
+class CompletedRequest:
+    request: ServeRequest
+    result: Any                        # GenerationResult
+    batch_id: int
+    queue_delay_s: float
+    latency_s: float                   # simulated completion - arrival
+    decision: Any                      # BatchRoutingDecision
+
+
+class RequestQueue:
+    """Tier-aware admission + per-bucket FIFO.
+
+    ``router`` supplies the tier registry (`resolve_tier`) and the coverage
+    floor (`required_samples`); pass None for a policy-free queue (any tier
+    object accepted verbatim).
+    """
+
+    def __init__(self, router=None, max_queue_depth: Optional[int] = 256,
+                 bucket_key=None):
+        self.router = router
+        self.max_queue_depth = max_queue_depth
+        self.bucket_key = bucket_key or _default_bucket_key
+        self._buckets: Dict[Tuple, Deque[ServeRequest]] = {}
+        self._depth: Dict[str, int] = {}
+        self._seq = 0
+        self._next_id = 0
+        # bounded: rejections are diagnostics, not an audit log
+        self.rejections: Deque[AdmissionResult] = deque(maxlen=256)
+
+    # ----------------------------------------------------------- admission
+    def submit(self, prompt: np.ndarray, tier, n_samples: int = 1,
+               max_new_tokens: int = 32, temperature: float = 0.8,
+               rng=None, extras: Optional[Dict] = None,
+               arrival_s: float = 0.0,
+               max_sequences: Optional[int] = None) -> AdmissionResult:
+        if self.router is not None and isinstance(tier, str):
+            try:
+                tier = self.router.resolve_tier(tier)
+            except KeyError:
+                res = AdmissionResult(False, reason=f"unknown tier {tier!r}")
+                self.rejections.append(res)
+                return res
+        elif isinstance(tier, str):
+            raise ValueError("string tier names need a router to resolve")
+        name = tier.name
+        if self.max_queue_depth is not None and \
+                self._depth.get(name, 0) >= self.max_queue_depth:
+            res = AdmissionResult(
+                False, reason=f"tier {name!r} queue full "
+                              f"({self.max_queue_depth})")
+            self.rejections.append(res)
+            return res
+        raised = None
+        if self.router is not None:
+            floor = self.router.required_samples(tier)
+            if floor is not None and floor > n_samples:
+                n_samples, raised = floor, floor
+        if max_sequences is not None and n_samples > max_sequences:
+            # a request that can never fit the backend's KV slot budget is
+            # rejected at the door instead of wedging the batch former
+            res = AdmissionResult(
+                False, reason=f"n_samples={n_samples} exceeds the KV slot "
+                              f"budget ({max_sequences})")
+            self.rejections.append(res)
+            return res
+        req = ServeRequest(self._next_id, prompt, tier, n_samples,
+                           max_new_tokens, temperature, rng=rng,
+                           extras=extras, arrival_s=arrival_s,
+                           seq=self._seq)
+        self._next_id += 1
+        self._seq += 1
+        self._depth[name] = self._depth.get(name, 0) + 1
+        key = self.bucket_key(prompt, max_new_tokens, temperature)
+        self._buckets.setdefault(key, deque()).append(req)
+        return AdmissionResult(True, req.id, raised_samples=raised)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._buckets.values())
+
+    def __len__(self) -> int:
+        return self.pending
+
+    def depth(self, tier_name: str) -> int:
+        return self._depth.get(tier_name, 0)
+
+    def _oldest_bucket(self) -> Optional[Tuple]:
+        live = {k: q for k, q in self._buckets.items() if q}
+        if not live:
+            return None
+        return min(live, key=lambda k: live[k][0].seq)
+
+    # ----------------------------------------------------------- batching
+    def pop_batch(self, max_requests: int,
+                  max_sequences: Optional[int] = None) -> List[ServeRequest]:
+        """Pop the next batch: oldest bucket first, FIFO within it (which is
+        FIFO within every tier), bounded by request count and the backend's
+        free KV slots. Never mixes buckets."""
+        key = self._oldest_bucket()
+        if key is None:
+            return []
+        q = self._buckets[key]
+        out: List[ServeRequest] = []
+        seqs = 0
+        while q and len(out) < max_requests:
+            head = q[0]
+            if max_sequences is not None and \
+                    seqs + head.n_samples > max_sequences:
+                break      # head waits for slots to free (retiring batches)
+            out.append(q.popleft())
+            seqs += head.n_samples
+            self._depth[head.tier_name] -= 1
+        return out
+
+    def push_front(self, requests: Sequence[ServeRequest]) -> None:
+        """Return popped requests to the head of their bucket, order
+        preserved (cap-aware batch shrinking)."""
+        for req in reversed(list(requests)):
+            key = self.bucket_key(req.prompt, req.max_new_tokens,
+                                  req.temperature)
+            self._buckets.setdefault(key, deque()).appendleft(req)
+            self._depth[req.tier_name] = self._depth.get(req.tier_name, 0) + 1
+
+
+@dataclass(eq=False)
+class _InflightEntry:
+    handle: Any
+    requests: List[ServeRequest]
+    decision: Any
+    record: BatchRecord
+    start_t: float
+    done_t: float
+
+
+class ContinuousBatchingScheduler:
+    """Mixed-tier continuous batching over an execution backend.
+
+    One ``step()`` forms new batches while capacity allows (admission ->
+    route_batch -> backend prefill) and advances every in-flight batch by
+    one decode token; finished batches retire into ``completed`` keyed by
+    request id. ``run_until_idle`` drains everything queued.
+    """
+
+    def __init__(self, backend, router,
+                 config: SchedulerConfig = SchedulerConfig(),
+                 queue: Optional[RequestQueue] = None, trace=None):
+        self.backend = backend
+        self.router = router
+        self.config = config
+        self.queue = queue if queue is not None else \
+            RequestQueue(router, config.max_queue_depth)
+        # optional repro.qeil2.telemetry.TraceStore: one "serve" record per
+        # formed batch (tier mix, queue delay, operating point, SignalSet
+        # snapshots) — serving's side of the calibration measurement loop.
+        self.trace = trace
+        self.clock = 0.0               # simulated now
+        self.pipeline_free_t = 0.0     # simulated pipeline horizon
+        self.inflight: List[_InflightEntry] = []
+        # completed results are the caller's to drain: pop entries after
+        # reading them (the RoutedServingEngine shim does) — a long-lived
+        # server must not retain every GenerationResult forever
+        self.completed: Dict[int, CompletedRequest] = {}
+        self.records: Deque[BatchRecord] = deque(maxlen=1024)
+        self.reroute_boundaries = 0    # ControlLoop re-anneal notifications
+        self._reroute_pending = False
+        self._batch_id = 0
+        self._base_rng = None          # lazily: jax import only when needed
+
+    # ----------------------------------------------------------- admission
+    def submit(self, prompt: np.ndarray, tier, n_samples: int = 1,
+               max_new_tokens: Optional[int] = None,
+               temperature: Optional[float] = None, rng=None,
+               extras: Optional[Dict] = None,
+               arrival_s: Optional[float] = None) -> AdmissionResult:
+        return self.queue.submit(
+            prompt, tier, n_samples=n_samples,
+            max_new_tokens=(max_new_tokens if max_new_tokens is not None
+                            else self.config.max_new_tokens),
+            temperature=(temperature if temperature is not None
+                         else self.config.temperature),
+            rng=rng, extras=extras,
+            arrival_s=self.clock if arrival_s is None else arrival_s,
+            max_sequences=getattr(self.backend, "max_slots", None))
+
+    # ------------------------------------------------------------- control
+    def on_reorchestrate(self, healthy: Optional[Sequence[str]] = None
+                         ) -> None:
+        """ControlLoop hook: a drift-triggered re-anneal landed. The
+        post-drift healthy set is pushed into the router (idempotent when
+        the loop already synced a shared router), and the next batch
+        *formation* re-pulls the refreshed frontier; the boundary is marked
+        so telemetry shows where placement changed."""
+        if healthy is not None and hasattr(self.router, "set_healthy"):
+            self.router.set_healthy(healthy)
+        self.reroute_boundaries += 1
+        self._reroute_pending = True
+
+    def advance_to(self, t_s: float) -> None:
+        """Move the simulated clock forward (idle time between arrivals)."""
+        self.clock = max(self.clock, t_s)
+
+    # ------------------------------------------------------------ batching
+    def _batch_rng(self, requests: List[ServeRequest]):
+        import jax
+        carried = [r.rng for r in requests if r.rng is not None]
+        if len(requests) == 1 and carried:
+            # parity path: a single-request batch follows the exact split
+            # sequence of the pre-refactor generate (call key -> group key)
+            base = carried[0]
+        elif carried:
+            # caller-seeded stream: vary with the caller's key (two runs
+            # differing only in rng must produce different samples), folded
+            # with the batch index to decorrelate batches of one call
+            base = jax.random.fold_in(carried[0], self._batch_id)
+        else:
+            if self._base_rng is None:
+                self._base_rng = jax.random.key(self.config.seed)
+            base = jax.random.fold_in(self._base_rng, self._batch_id)
+        return jax.random.split(base)[1]
+
+    def _form_batch(self) -> Optional[_InflightEntry]:
+        free = self.backend.slots_free
+        if free is not None and free <= 0:
+            return None
+        reqs = self.queue.pop_batch(self.config.max_batch_requests, free)
+        if not reqs:
+            return None
+        # extras compatibility: one batch stacks one set of per-request
+        # extras rows, so a request with different (or no) extras keys
+        # splits the batch there (it heads the next one — FIFO preserved)
+        keys0 = frozenset(reqs[0].extras or ())
+        cut = next((i for i, r in enumerate(reqs)
+                    if frozenset(r.extras or ()) != keys0), None)
+        if cut is not None:
+            self.queue.push_front(reqs[cut:])
+            reqs = reqs[:cut]
+        # cap-aware sizing: merged caps tighten to the strictest member, and
+        # feasibility depends on batch size (re-costed makespan grows with
+        # it) — shed the newest half back to the queue until the routed
+        # point meets caps or the batch is a single request. Each candidate
+        # is routed/costed at what would actually execute: the members'
+        # (possibly admission-raised) mean sampling budget and the bucket's
+        # prompt length / decode horizon, not the router's canonical
+        # workload — SLA caps must hold for the real batch.
+        while True:
+            decision = self.router.route_batch(
+                [r.tier for r in reqs],
+                samples=math.ceil(sum(r.n_samples for r in reqs)
+                                  / len(reqs)),
+                prompt_tokens=len(reqs[0].prompt),
+                decode_tokens=reqs[0].max_new_tokens)
+            if decision.meets_caps or len(reqs) == 1 or \
+                    not self.config.respect_caps:
+                break
+            keep = max(1, len(reqs) // 2)
+            self.queue.push_front(reqs[keep:])
+            reqs = reqs[:keep]
+
+        start = max(self.clock, self.pipeline_free_t)
+        done_t = start + decision.latency_s
+        self.pipeline_free_t = done_t
+        extras = None
+        if reqs[0].extras:
+            extras = {k: np.stack([r.extras[k] for r in reqs])
+                      for k in reqs[0].extras}
+        handle = self.backend.start_batch(
+            [r.prompt for r in reqs], [r.n_samples for r in reqs],
+            reqs[0].max_new_tokens, reqs[0].temperature,
+            self._batch_rng(reqs), extras)
+        self.backend.note_placement(decision.assignment)
+
+        tier_mix: Dict[str, int] = {}
+        for r in reqs:
+            tier_mix[r.tier_name] = tier_mix.get(r.tier_name, 0) + 1
+        record = BatchRecord(
+            batch_id=self._batch_id, t_s=start,
+            bucket=len(reqs[0].prompt), n_requests=len(reqs),
+            n_sequences=sum(r.n_samples for r in reqs), tier_mix=tier_mix,
+            queue_delay_s=max(start - r.arrival_s for r in reqs),
+            point_index=decision.point_index,
+            energy_j=decision.energy_j, latency_s=decision.latency_s,
+            meets_caps=decision.meets_caps, reroute=self._reroute_pending)
+        self._reroute_pending = False
+        self._batch_id += 1
+        self.records.append(record)
+        if self.trace is not None:
+            self.trace.ingest_serve(record,
+                                    signals=plan_signals(decision))
+        return _InflightEntry(handle, reqs, decision, record, start, done_t)
+
+    def _retire(self, entry: _InflightEntry) -> None:
+        results = self.backend.finalize(entry.handle)
+        self.clock = max(self.clock, entry.done_t)
+        for req, res in zip(entry.requests, results):
+            self.completed[req.id] = CompletedRequest(
+                request=req, result=res, batch_id=entry.record.batch_id,
+                queue_delay_s=entry.start_t - req.arrival_s,
+                latency_s=entry.done_t - req.arrival_s,
+                decision=entry.decision)
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One scheduler iteration: form batches while capacity allows, then
+        one decode token per in-flight batch; retire finished batches.
+        Returns False when there was nothing to do."""
+        progressed = False
+        while len(self.inflight) < self.config.max_inflight_batches:
+            entry = self._form_batch()
+            if entry is None:
+                break
+            self.inflight.append(entry)
+            progressed = True
+        for entry in list(self.inflight):
+            if not entry.handle.done:
+                self.backend.decode_step(entry.handle)
+                progressed = True
+            if entry.handle.done:
+                self.inflight.remove(entry)
+                self._retire(entry)
+                progressed = True
+        return progressed
+
+    def run_until_idle(self, max_steps: int = 10 ** 6
+                       ) -> Dict[int, CompletedRequest]:
+        """Drain the queue and every in-flight batch; returns ``completed``
+        (request id -> CompletedRequest)."""
+        steps = 0
+        while (self.queue.pending or self.inflight) and steps < max_steps:
+            if not self.step():
+                break                      # starved (e.g. zero slots free)
+            steps += 1
+        return self.completed
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        done = list(self.completed.values())
+        per_tier: Dict[str, List[float]] = {}
+        for c in done:
+            per_tier.setdefault(c.request.tier_name, []).append(c.latency_s)
+        return {
+            "completed": len(done),
+            "batches": len(self.records),
+            "mean_batch_requests": (float(np.mean([r.n_requests
+                                                   for r in self.records]))
+                                    if self.records else 0.0),
+            "caps_met_fraction": (float(np.mean([r.meets_caps
+                                                 for r in self.records]))
+                                  if self.records else 1.0),
+            "energy_j": sum(r.energy_j for r in self.records),
+            "sequences": sum(r.n_sequences for r in self.records),
+            "makespan_s": self.pipeline_free_t,
+            "latency_p95_s": {t: float(np.percentile(v, 95))
+                              for t, v in sorted(per_tier.items())},
+            "reroute_boundaries": self.reroute_boundaries,
+        }
+
+
+def plan_signals(decision) -> Dict[str, dict]:
+    """Per-stage `SignalSet.as_dict()` snapshots of a routed batch — present
+    when the orchestrator costs plans with the v2 model (`StageExecutionV2`
+    records carry the signal triple). Mirrors the control loop's per-step
+    snapshot so serve traces feed the same `CalibrationFitter`."""
+    out: Dict[str, dict] = {}
+    costs = getattr(decision, "batch_costs", None)
+    if costs is None:
+        return out
+    for e in costs.executions:
+        sig = getattr(e, "signals", None)
+        if sig is not None:
+            out[e.stage.name] = sig.as_dict()
+    return out
