@@ -40,6 +40,7 @@ BENCHES = [
      "acceptance_all"),
     ("serving_schedule", "benchmarks.serving_schedule",
      "acceptance_all"),
+    ("kv_paging", "benchmarks.kv_paging", "acceptance_all"),
 ]
 
 

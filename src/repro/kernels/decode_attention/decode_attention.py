@@ -116,3 +116,101 @@ def decode_attention_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
         interpret=interpret,
     )(q, k_cache, v_cache, pos.astype(jnp.int32), q_pos.astype(jnp.int32))
     return out
+
+
+def _paged_decode_kernel(tab_ref, q_ref, k_ref, v_ref, pos_ref, qpos_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, scale: float):
+    """Block-table variant: the grid's kv axis walks a sequence's *logical*
+    blocks and the scalar-prefetched table redirects each BlockSpec fetch to
+    the physical pool block — the k repeats of one prompt stream their shared
+    prefix blocks from the same HBM locations. Math is identical to
+    `_decode_kernel` (flash-style running (m, l, acc) over kv tiles)."""
+    del tab_ref                       # consumed by the index_maps
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)           # (1, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, hd) one pool block
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    slot_pos = pos_ref[0]                             # (bs,) absolute positions
+    q_pos = qpos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= q_pos)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(valid[None, :], jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0] = (acc_scr[...] /
+                          jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                  v_pool: jnp.ndarray, pos_pool: jnp.ndarray,
+                                  block_table: jnp.ndarray,
+                                  q_pos: jnp.ndarray, *,
+                                  scale: Optional[float] = None,
+                                  interpret: bool = True) -> jnp.ndarray:
+    """Paged decode attention: q (B, 1, H, D); pools (P, bs, Hkv, D[v]) of
+    fixed-size KV blocks; pos_pool (P, bs) absolute positions per pool slot
+    (-1 = empty); block_table (B, nb) physical block per logical block;
+    q_pos (B,). Returns (B, 1, H, Dv).
+
+    The table rides in as a scalar-prefetch operand
+    (`pltpu.PrefetchScalarGridSpec`) so the index_maps — which run ahead of
+    the kernel body to schedule DMA — can do the gather; no dense (B, W)
+    copy of the cache is ever materialized."""
+    B, S1, H, D = q.shape
+    assert S1 == 1, "decode kernel is single-token"
+    _, bs, Hkv, Dv = v_pool.shape
+    nb = block_table.shape[1]
+    group = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, tab: (b, 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tab, g=group: (tab[b, j], 0,
+                                                        h // g, 0)),
+            pl.BlockSpec((1, bs, 1, Dv),
+                         lambda b, h, j, tab, g=group: (tab[b, j], 0,
+                                                        h // g, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, j, tab: (tab[b, j], 0)),
+            pl.BlockSpec((1,), lambda b, h, j, tab: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dv), lambda b, h, j, tab: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, Dv), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, Dv), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), q, k_pool, v_pool,
+      pos_pool.astype(jnp.int32), q_pos.astype(jnp.int32))
+    return out

@@ -10,9 +10,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import \
-    decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas, paged_decode_attention_pallas)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
 
 
 def _on_tpu() -> bool:
@@ -29,6 +30,16 @@ def decode_attention_cache(q, k_cache, v_cache, pos, q_pos, *,
                                    block_k=block_k, interpret=not _on_tpu())
 
 
+@functools.partial(jax.jit, static_argnames=("scale",))
+def paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table, q_pos, *,
+                           scale: Optional[float] = None) -> jnp.ndarray:
+    """Paged (block-table) decode attention over fixed-size KV pools — the
+    serving hot path when the backend runs a paged cache."""
+    return paged_decode_attention_pallas(q, k_pool, v_pool, pos_pool,
+                                         block_table, q_pos, scale=scale,
+                                         interpret=not _on_tpu())
+
+
 def decode_attention(q, k_cache, v_cache, mask, *, scale=None):
     """Mask-based compatibility shim for repro.models.attention: falls back to
     the reference math (the mask already encodes positions/window)."""
@@ -38,4 +49,5 @@ def decode_attention(q, k_cache, v_cache, mask, *, scale=None):
                 scale if scale is not None else q.shape[-1] ** -0.5)
 
 
-__all__ = ["decode_attention_cache", "decode_attention", "decode_attention_ref"]
+__all__ = ["decode_attention_cache", "decode_attention", "decode_attention_ref",
+           "paged_decode_attention", "paged_decode_attention_ref"]

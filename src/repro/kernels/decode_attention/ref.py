@@ -30,3 +30,21 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray, pos_pool: jnp.ndarray,
+                               block_table: jnp.ndarray,
+                               q_pos: jnp.ndarray, *,
+                               scale: Optional[float] = None,
+                               kv_len: Optional[int] = None) -> jnp.ndarray:
+    """Oracle for the paged kernel: gather each sequence's pool blocks in
+    logical order into a dense (B, nb*bs) cache view, then run the dense
+    decode oracle. pools (P, bs, Hkv, D[v]); block_table (B, nb)."""
+    B = q.shape[0]
+    kc = k_pool[block_table].reshape(B, -1, *k_pool.shape[2:])
+    vc = v_pool[block_table].reshape(B, -1, *v_pool.shape[2:])
+    pc = pos_pool[block_table].reshape(B, -1)
+    if kv_len is not None:
+        kc, vc, pc = kc[:, :kv_len], vc[:, :kv_len], pc[:, :kv_len]
+    return decode_attention_ref(q, kc, vc, pc, q_pos, scale=scale)

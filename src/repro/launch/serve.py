@@ -47,6 +47,11 @@ def main() -> None:
                          "batches mix tiers (--router)")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="scheduler batch size bound (--router)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged KV cache: block budget (prefix sharing "
+                         "across repeated samples; supported archs only)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="paged KV cache: token slots per block")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -115,7 +120,20 @@ def main() -> None:
         extras["cond_memory"] = jnp.zeros(
             (len(prompts), cfg.n_cond_tokens, cfg.d_model), model.dtype)
 
-    engine = ServingEngine(model, params, max_new_tokens=args.max_new)
+    backend = None
+    if args.kv_blocks is not None:
+        from repro.models.cache import paged_supported
+        from repro.serving import ExecutionBackend
+        if paged_supported(cfg):
+            backend = ExecutionBackend(model, params, kv_blocks=args.kv_blocks,
+                                       kv_block_size=args.kv_block_size)
+            print(f"[kv] paged cache: {args.kv_blocks} blocks x "
+                  f"{args.kv_block_size} slots")
+        else:
+            print(f"[kv] arch {cfg.name!r} unsupported for paging; "
+                  "dense cache")
+    engine = ServingEngine(model, params, max_new_tokens=args.max_new,
+                           backend=backend)
     t0 = time.perf_counter()
     if router is not None:
         from repro.serving import ContinuousBatchingScheduler, SchedulerConfig

@@ -183,13 +183,21 @@ def sdpa_causal_blocked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
                 positions: jnp.ndarray,
                 cache: Optional[Dict] = None,
-                use_kernel: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+                use_kernel: bool = False,
+                block_table: Optional[jnp.ndarray] = None,
+                kv_len: Optional[int] = None) -> Tuple[jnp.ndarray,
+                                                       Optional[Dict]]:
     """Unified GQA attention.
 
     train/prefill: x (B,S,D), positions (B,S[,3]); cache None (train) or an empty
       cache dict to fill (prefill).
     decode: x (B,1,D); cache holds k/v + per-slot absolute positions; ring-buffer
       writes when cfg.attn_window is set.
+    paged: with ``block_table`` (B, n_blocks) the cache entries are block
+      pools (repro.models.cache paged layout); position p lives in pool block
+      ``table[b, p // bs]`` row ``p % bs``. ``kv_len`` statically bounds the
+      logical sequence so the gathered reference path is element-for-element
+      identical to the dense cache (bit-exact parity).
     """
     B, S, _ = x.shape
     hd = cfg.hd
@@ -223,7 +231,32 @@ def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
             out = sdpa(q, k, v, mask, scale)
         new_cache = None
         if cache is not None:
-            new_cache = _fill_cache(cfg, cache, k, v, pos1d)
+            new_cache = (_fill_cache_paged(cache, k, v, pos1d, block_table)
+                         if block_table is not None
+                         else _fill_cache(cfg, cache, k, v, pos1d))
+        y = dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+        return y, new_cache
+
+    if block_table is not None:
+        # ---- paged decode: write through the block table (same scatter as
+        # prefill), attend over the gathered (reference) or table-indexed
+        # (kernel) pools
+        new_cache = _fill_cache_paged(cache, k, v, pos1d, block_table)
+        ck, cv, cpos = new_cache["k"], new_cache["v"], new_cache["pos"]
+        if use_kernel:
+            from repro.kernels.decode_attention import ops as da_ops
+            out = da_ops.paged_decode_attention(q, ck, cv, cpos, block_table,
+                                                pos1d[:, 0], scale=scale)
+        else:
+            # gather the sequence's blocks in logical order and slice to the
+            # exact cache length: element-for-element the dense decode path
+            kc = ck[block_table].reshape(B, -1, *ck.shape[2:])
+            vc = cv[block_table].reshape(B, -1, *cv.shape[2:])
+            pc = cpos[block_table].reshape(B, -1)
+            if kv_len is not None:
+                kc, vc, pc = kc[:, :kv_len], vc[:, :kv_len], pc[:, :kv_len]
+            ok = (pc[:, None, :] >= 0) & (pc[:, None, :] <= pos1d[:, :, None])
+            out = sdpa(q, kc, vc, ok, scale)
         y = dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
         return y, new_cache
 
@@ -267,6 +300,25 @@ def _fill_cache(cfg: ArchConfig, cache: Dict, k, v, pos1d) -> Dict:
     ck = ck.at[bidx, slot].set(k.astype(ck.dtype))
     cv = cv.at[bidx, slot].set(v.astype(cv.dtype))
     cpos = cpos.at[bidx, slot].set(pos1d.astype(jnp.int32))
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def _fill_cache_paged(cache: Dict, k, v, pos1d,
+                      block_table: jnp.ndarray) -> Dict:
+    """Write prefill keys/values through the block table into paged pools.
+
+    ``block_table`` here is the *prefill* table (one row per unique prompt):
+    position p lands in pool block ``table[b, p // bs]`` row ``p % bs``.
+    Every row owns distinct blocks, so scatter indices stay unique.
+    """
+    ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+    bs = ck.shape[1]
+    bidx = jnp.arange(pos1d.shape[0])[:, None]
+    blk = block_table[bidx, pos1d // bs]
+    row = (pos1d % bs).astype(jnp.int32)
+    ck = ck.at[blk, row].set(k.astype(ck.dtype))
+    cv = cv.at[blk, row].set(v.astype(cv.dtype))
+    cpos = cpos.at[blk, row].set(pos1d.astype(jnp.int32))
     return {"k": ck, "v": cv, "pos": cpos}
 
 

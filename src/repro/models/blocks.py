@@ -89,7 +89,10 @@ def super_block_init(key, cfg: ArchConfig, n_prefix: int, dtype) -> Params:
 def sublayer_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
                      positions: jnp.ndarray, mixer: str,
                      cache: Optional[Dict], memory: Optional[jnp.ndarray],
-                     use_kernel: bool) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+                     use_kernel: bool,
+                     block_table: Optional[jnp.ndarray] = None,
+                     kv_len: Optional[int] = None
+                     ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     aux = jnp.zeros((), jnp.float32)
     S = x.shape[1]
     # cross-attention K/V cache entries ride in the attention sub-cache; pull
@@ -106,7 +109,9 @@ def sublayer_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
                                             use_kernel=use_kernel)
         else:
             y, new_cache = attn.gqa_forward(p["attn"], cfg, h, positions, cache,
-                                            use_kernel=use_kernel)
+                                            use_kernel=use_kernel,
+                                            block_table=block_table,
+                                            kv_len=kv_len)
     else:
         y, new_cache = ssm_mod.ssm_forward(p["ssm"], cfg, h, cache,
                                            use_kernel=use_kernel)
@@ -131,7 +136,9 @@ def sublayer_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
 def super_block_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
                         positions: jnp.ndarray,
                         cache: Optional[Dict], memory: Optional[jnp.ndarray],
-                        use_kernel: bool
+                        use_kernel: bool,
+                        block_table: Optional[jnp.ndarray] = None,
+                        kv_len: Optional[int] = None
                         ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """One period of the layer pattern. cache is {"l{i}": sub-cache} or None."""
     aux_total = jnp.zeros((), jnp.float32)
@@ -140,7 +147,8 @@ def super_block_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
         key = f"l{i}"
         sub_cache = cache.get(key) if cache is not None else None
         x, nc, aux = sublayer_forward(p[key], cfg, x, positions, mixer,
-                                      sub_cache, memory, use_kernel)
+                                      sub_cache, memory, use_kernel,
+                                      block_table=block_table, kv_len=kv_len)
         if new_cache is not None:
             new_cache[key] = nc
         aux_total = aux_total + aux

@@ -10,15 +10,45 @@ more than `window` slots — this is what makes long_500k decode sub-quadratic f
 the sliding-window variants (DESIGN.md §4).
 
 ``spec_only=True`` mirrors the allocation with ShapeDtypeStructs for the dry-run.
+
+Paged layout (``paged=PagedLayout(...)``): GQA entries become block *pools* —
+k/v ``(n_blocks, block_size, n_kv, hd)`` plus per-slot positions
+``(n_blocks, block_size)`` — addressed through a per-sequence block table the
+serving backend builds (`repro.serving.backend.BlockAllocator`). One logical
+block id addresses the same slot in every layer's pool, so a single table
+serves the whole stack, and the k repeated samples of one prompt can share
+physical prefix blocks (prefill once, copy-on-write at the first divergent
+token). Paged caches are supported for pure-attention GQA stacks without a
+sliding window (`paged_supported`); everything else keeps the dense layout.
 """
 from __future__ import annotations
 
-from typing import Dict
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig
+
+
+@dataclass(frozen=True)
+class PagedLayout:
+    """Physical geometry of a paged KV cache: ``n_blocks`` fixed-size blocks
+    of ``block_size`` token slots, shared by every attention layer."""
+    n_blocks: int
+    block_size: int
+
+
+def paged_supported(cfg: ArchConfig) -> bool:
+    """Paged KV caching covers the GQA ring-free case: every mixer is
+    attention, no MLA latent cache, no sliding window (the ring buffer's
+    slot recycling conflicts with block-granular sharing), no cross-attention
+    conditioning memory riding in the cache."""
+    return (all(m == "a" for m in cfg.pattern)
+            and cfg.mla is None
+            and cfg.attn_window is None
+            and not cfg.cross_attention)
 
 
 def n_prefix_layers(cfg: ArchConfig) -> int:
@@ -36,7 +66,20 @@ def n_scanned_super_blocks(cfg: ArchConfig) -> int:
     return rest // period
 
 
-def _attn_entry(cfg: ArchConfig, batch: int, cache_len: int, dtype, spec_only: bool):
+def _attn_entry(cfg: ArchConfig, batch: int, cache_len: int, dtype, spec_only: bool,
+                paged: Optional[PagedLayout] = None):
+    if paged is not None:
+        shapes = {
+            "k": ((paged.n_blocks, paged.block_size, cfg.n_kv_heads, cfg.hd),
+                  dtype),
+            "v": ((paged.n_blocks, paged.block_size, cfg.n_kv_heads, cfg.hd),
+                  dtype),
+            "pos": ((paged.n_blocks, paged.block_size), jnp.int32),
+        }
+        if spec_only:
+            return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+        return {k: (jnp.full(s, -1, d) if k == "pos" else jnp.zeros(s, d))
+                for k, (s, d) in shapes.items()}
     W = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
     if cfg.mla is not None:
         m = cfg.mla
@@ -75,15 +118,17 @@ def _ssm_entry(cfg: ArchConfig, batch: int, dtype, spec_only: bool):
 
 
 def _entry(cfg: ArchConfig, mixer: str, batch: int, cache_len: int, dtype,
-           spec_only: bool):
+           spec_only: bool, paged: Optional[PagedLayout] = None):
     if mixer == "a":
-        return _attn_entry(cfg, batch, cache_len, dtype, spec_only)
+        return _attn_entry(cfg, batch, cache_len, dtype, spec_only, paged)
     return _ssm_entry(cfg, batch, dtype, spec_only)
 
 
 def _super_block_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype,
-                       spec_only: bool) -> Dict:
-    return {f"l{i}": _entry(cfg, mixer, batch, cache_len, dtype, spec_only)
+                       spec_only: bool,
+                       paged: Optional[PagedLayout] = None) -> Dict:
+    return {f"l{i}": _entry(cfg, mixer, batch, cache_len, dtype, spec_only,
+                            paged)
             for i, mixer in enumerate(cfg.pattern)}
 
 
@@ -95,16 +140,69 @@ def _stack(tree, n: int, spec_only: bool):
 
 
 def make_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
-               spec_only: bool = False) -> Dict:
-    """Full-model cache: {"prefix": [...], "blocks": (n_scanned, ...) stacked}."""
+               spec_only: bool = False,
+               paged: Optional[PagedLayout] = None) -> Dict:
+    """Full-model cache: {"prefix": [...], "blocks": (n_scanned, ...) stacked}.
+
+    With ``paged`` the attention entries become block pools (see module
+    docstring); ``batch``/``cache_len`` are then ignored — capacity lives in
+    the block table the caller maintains.
+    """
+    if paged is not None and not paged_supported(cfg):
+        raise ValueError(f"paged KV cache unsupported for arch {cfg.name!r} "
+                         "(needs all-attention pattern, no MLA, no window, "
+                         "no cross-attention)")
     period = len(cfg.pattern)
     prefix = [
-        _entry(cfg, cfg.pattern[i % period], batch, cache_len, dtype, spec_only)
+        _entry(cfg, cfg.pattern[i % period], batch, cache_len, dtype,
+               spec_only, paged)
         for i in range(n_prefix_layers(cfg))
     ]
-    blocks = _stack(_super_block_cache(cfg, batch, cache_len, dtype, spec_only),
+    blocks = _stack(_super_block_cache(cfg, batch, cache_len, dtype, spec_only,
+                                       paged),
                     n_scanned_super_blocks(cfg), spec_only)
     return {"prefix": prefix, "blocks": blocks}
+
+
+def copy_cache_blocks(cache: Dict, src: jnp.ndarray, dst: jnp.ndarray) -> Dict:
+    """Physically copy pool blocks ``src[i] -> dst[i]`` in every attention
+    pool: the copy-on-write fan-out of a shared, partially-filled prefix
+    block (each repeated sample of a prompt gets a private copy of the block
+    its first divergent token will land in). Only valid on paged caches
+    (every entry is a GQA pool)."""
+    def cp(entry: Dict, stacked: bool) -> Dict:
+        out = dict(entry)
+        for key in ("k", "v", "pos"):
+            leaf = entry[key]
+            out[key] = (leaf.at[:, dst].set(leaf[:, src]) if stacked
+                        else leaf.at[dst].set(leaf[src]))
+        return out
+
+    return {"prefix": [cp(e, False) for e in cache["prefix"]],
+            "blocks": {name: cp(e, True)
+                       for name, e in cache["blocks"].items()}}
+
+
+def kv_bytes_per_token(cfg: ArchConfig, bytes_per_el: int = 2) -> int:
+    """KV-cache bytes one token position occupies across the whole stack
+    (k + v + int32 position, summed over attention layers) — the unit that
+    maps slot/block counts to real memory."""
+    period = len(cfg.pattern)
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.pattern[i % period] == "a")
+    if cfg.mla is not None:
+        per_layer = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) \
+            * bytes_per_el + 4
+    else:
+        per_layer = 2 * cfg.n_kv_heads * cfg.hd * bytes_per_el + 4
+    return n_attn * per_layer
+
+
+def paged_cache_bytes(cfg: ArchConfig, n_blocks: int, block_size: int,
+                      bytes_per_el: int = 2) -> int:
+    """Real memory of a paged pool: the block budget the serving admission
+    control prices requests against."""
+    return n_blocks * block_size * kv_bytes_per_token(cfg, bytes_per_el)
 
 
 def cache_bytes(cfg: ArchConfig, batch: int, cache_len: int,

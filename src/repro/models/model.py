@@ -112,14 +112,31 @@ class Model:
         return cache_mod.make_cache(self.cfg, batch, cache_len, self.dtype,
                                     spec_only=spec_only)
 
+    def init_paged_cache(self, n_blocks: int, block_size: int,
+                         spec_only: bool = False):
+        """Block-pool cache (repro.models.cache paged layout); address it by
+        passing ``batch["block_table"]`` (and a static ``kv_len``) to
+        `forward`."""
+        return cache_mod.make_cache(
+            self.cfg, 0, 0, self.dtype, spec_only=spec_only,
+            paged=cache_mod.PagedLayout(n_blocks, block_size))
+
     # ------------------------------------------------------------------ forward
     def forward(self, params: Dict, batch: Dict,
-                cache: Optional[Dict] = None
+                cache: Optional[Dict] = None,
+                kv_len: Optional[int] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
-        """Returns (logits, new_cache, aux_loss)."""
+        """Returns (logits, new_cache, aux_loss).
+
+        ``batch["block_table"]`` switches attention caching to the paged
+        layout (prefill: one row per unique prompt; decode: one row per
+        sequence); ``kv_len`` is the static logical cache length the paged
+        reference path slices the gathered pools to.
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape[:2]
+        block_table = batch.get("block_table")
 
         positions = batch.get("positions")
         if positions is None:
@@ -154,7 +171,8 @@ class Model:
             sub_cache = cache["prefix"][i] if cache is not None else None
             h, nc, aux = blk.sublayer_forward(
                 params["prefix"][i], cfg, h, positions, mixer, sub_cache,
-                memory, self.use_kernel)
+                memory, self.use_kernel, block_table=block_table,
+                kv_len=kv_len)
             aux_total = aux_total + aux
             if new_prefix is not None:
                 new_prefix.append(nc)
@@ -162,7 +180,8 @@ class Model:
         # ---- scanned super-blocks
         sb_fwd = functools.partial(blk.super_block_forward, cfg=cfg,
                                    positions=positions, memory=memory,
-                                   use_kernel=self.use_kernel)
+                                   use_kernel=self.use_kernel,
+                                   block_table=block_table, kv_len=kv_len)
         if cache is None:
             def one(bp_, x_):
                 x2_, _, a_ = sb_fwd(bp_, x=x_, cache=None)

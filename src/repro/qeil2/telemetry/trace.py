@@ -163,7 +163,14 @@ class TraceStore:
             "latency_s": float(record.latency_s),
             "meets_caps": bool(record.meets_caps),
             "reroute": bool(record.reroute),
+            # paged-KV occupancy: lets the calibration fitter see paging's
+            # allocation pressure (CPQ residuals) alongside batch energy
+            "prefill_bytes_saved": float(getattr(record,
+                                                 "prefill_bytes_saved", 0.0)),
         }
+        kv = getattr(record, "kv_blocks_in_use", None)
+        if kv is not None:
+            rec["kv_blocks_in_use"] = int(kv)
         if signals:
             rec["signals"] = signals
         if extra:

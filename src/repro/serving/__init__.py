@@ -1,5 +1,7 @@
-from repro.serving.backend import (ExecutionBackend, GenerationResult,
-                                   InFlightBatch, bucket_key)
+from repro.serving.backend import (BlockAllocator, ExecutionBackend,
+                                   GenerationResult, InFlightBatch,
+                                   PagedBatchLayout, bucket_key,
+                                   build_paged_layout)
 from repro.serving.engine import ServingEngine
 from repro.serving.scheduler import (AdmissionResult, BatchRecord,
                                      CompletedRequest,
@@ -10,4 +12,5 @@ from repro.serving.scheduler import (AdmissionResult, BatchRecord,
 __all__ = ["ServingEngine", "GenerationResult", "ExecutionBackend",
            "InFlightBatch", "bucket_key", "ContinuousBatchingScheduler",
            "RequestQueue", "SchedulerConfig", "ServeRequest",
-           "AdmissionResult", "BatchRecord", "CompletedRequest"]
+           "AdmissionResult", "BatchRecord", "CompletedRequest",
+           "BlockAllocator", "PagedBatchLayout", "build_paged_layout"]

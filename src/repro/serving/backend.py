@@ -2,9 +2,10 @@
 
 Extracted from the original monolithic ``ServingEngine.generate`` so a
 scheduler can interleave work across batches instead of blocking on one
-call. The backend owns the jitted prefill/decode functions, the KV-cache
-slot budget, and static-shape bucketing; policy (admission, batch
-formation, routing) lives in `repro.serving.scheduler`.
+call. The backend owns the jitted prefill/decode functions, the KV budget
+(sequence slots, or paged blocks — see below), and static-shape bucketing;
+policy (admission, batch formation, routing) lives in
+`repro.serving.scheduler`.
 
 The step API is deliberately small:
 
@@ -13,7 +14,7 @@ The step API is deliberately small:
   `InFlightBatch` holding the KV cache and the rng stream.
 * ``decode_step`` — advance an in-flight batch by one autoregressive token.
 * ``finalize`` — stack the sampled tokens into per-request
-  `GenerationResult`s and release the batch's KV slots.
+  `GenerationResult`s and release the batch's KV budget.
 
 Running ``start_batch`` + ``decode_step`` until done + ``finalize`` is
 bit-identical to the pre-refactor monolith (same rng split sequence, same
@@ -24,17 +25,49 @@ Batches are formed within a *bucket*: prompts of one length (the static
 shape the jit specializes on) with one max-new-tokens horizon and one
 temperature. ``bucket_key`` is the canonical key; the scheduler never mixes
 buckets inside a batch.
+
+Paged KV cache (``kv_blocks=`` in the constructor)
+--------------------------------------------------
+The dense cache allocates ``B x (plen + max_new)`` KV rows per batch and
+holds them until the whole batch retires. For the paper's EAC/ARDE cascade
+— k repeated samples per prompt, CSVET stopping early — that re-prefills
+every repeat and re-buys the prefix k times, exactly the prefill memory
+traffic the roofline model says dominates edge decode. Paged mode replaces
+it:
+
+* `BlockAllocator` — fixed-size KV blocks with refcounts, a free list and
+  copy-on-write; ``kv_blocks`` is the *real* memory budget
+  (``kv_blocks * block_size * kv_bytes_per_token``), and ``blocks_free`` is
+  the admission currency the scheduler checks.
+* Prefill runs once per *unique prompt*; the k repeats share the full
+  prefix blocks by reference (`fork`). A partially-filled last prefix block
+  is copy-on-write forked at ``start_batch`` — each repeat gets a private
+  copy of the block its first divergent token lands in (`cow`), so the
+  whole block schedule is known up front and decode steps never touch the
+  allocator (jit-friendly static block tables).
+* Decode attention reads through the per-sequence block table — the Pallas
+  paged kernel gathers physical blocks via scalar-prefetched index maps;
+  the jnp reference path gathers + slices so it is *bit-identical* to the
+  dense path (pinned by ``tests/test_kv_paging.py``).
+* `release_sequences` returns a finished sample's private blocks to the
+  free list immediately (CSVET early-stop), instead of at batch retirement.
+
+Paged mode is supported for the architectures
+`repro.models.cache.paged_supported` accepts; everything else keeps the
+dense layout.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Deque, Dict, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import cache as cache_mod
 from repro.models.model import Model
 
 
@@ -47,11 +80,186 @@ class GenerationResult:
     decode_tokens: int = 0
 
 
+# ============================================================ block allocator
+
+class BlockAllocator:
+    """Fixed-size KV block accounting: free list + refcounts + copy-on-write.
+
+    This is the global *admission budget* for paged serving: every in-flight
+    batch's physical pool layout is mirrored here block-for-block, double
+    frees raise instead of silently corrupting the budget, and a shared
+    prefix block only returns to the free list when its *last* holder
+    releases it.
+
+    Physical pools are per-batch arrays reclaimed whole at batch retirement
+    (`ExecutionBackend.pool_blocks_resident` is the resident footprint), so
+    budget freed mid-flight by an early release admits new work whose pool
+    is *additional* memory until the donor batch retires — transient
+    overcommit bounded by the early-released block count. A single resident
+    pool shared across batches closes that gap (ROADMAP: cross-batch
+    physical block sharing).
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks <= 0 or block_size <= 0:
+            raise ValueError("n_blocks and block_size must be positive")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._ref: Dict[int, int] = {}
+
+    @property
+    def blocks_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    def alloc(self) -> int:
+        """Take one block off the free list (refcount 1)."""
+        if not self._free:
+            raise RuntimeError(
+                f"KV block pool exhausted ({self.n_blocks} blocks; "
+                "admission must check blocks_free)")
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        return bid
+
+    def fork(self, bid: int) -> int:
+        """Add a reference to a live block (prefix sharing across the
+        repeated samples of one prompt)."""
+        ref = self._ref.get(bid)
+        if ref is None:
+            raise KeyError(f"fork of unallocated block {bid}")
+        self._ref[bid] = ref + 1
+        return bid
+
+    def cow(self, bid: int) -> Tuple[int, bool]:
+        """Copy-on-write: the writable version of ``bid`` for one holder.
+        Sole holder writes in place (``(bid, False)``); a shared block costs
+        a fresh private block and drops one reference (``(new, True)`` — the
+        caller must physically copy the contents)."""
+        ref = self._ref.get(bid)
+        if ref is None:
+            raise KeyError(f"cow of unallocated block {bid}")
+        if ref == 1:
+            return bid, False
+        new = self.alloc()              # may raise before any state changes
+        self._ref[bid] = ref - 1
+        return new, True
+
+    def free(self, bid: int) -> bool:
+        """Drop one reference; returns True when the block physically went
+        back to the free list. Freeing an unallocated block raises — the
+        double-free guard the invariant tests pin."""
+        ref = self._ref.get(bid)
+        if ref is None:
+            raise RuntimeError(f"double free / free of unallocated block {bid}")
+        if ref > 1:
+            self._ref[bid] = ref - 1
+            return False
+        del self._ref[bid]
+        self._free.append(bid)
+        return True
+
+
+@dataclass
+class PagedBatchLayout:
+    """Physical pool layout of one in-flight batch. Built once at
+    ``start_batch`` (the whole block schedule — prefix sharing, CoW fan-out,
+    decode blocks — is deterministic given the bucket geometry), static for
+    the batch lifetime so decode steps stay pure jitted functions."""
+    block_size: int
+    n_pool_blocks: int                 # physical pool size (local ids)
+    kv_len: int                        # logical slots per sequence
+    prefill_table: np.ndarray          # (R, ceil(plen/bs)) local block ids
+    decode_table: np.ndarray           # (B, ceil(kv_len/bs)) local block ids
+    copy_src: np.ndarray               # CoW pairs: partial prefix block ->
+    copy_dst: np.ndarray               #   each repeat's private copy
+    seq_gids: List[List[int]]          # allocator ids referenced per sequence
+
+
+def build_paged_layout(allocator: BlockAllocator, plen: int, max_new: int,
+                       repeats: Sequence[int]) -> PagedBatchLayout:
+    """Allocate one batch's blocks and build its tables.
+
+    Per request: the ``plen // bs`` full prefix blocks are allocated once and
+    forked to every repeat; a partially-filled last prefix block is CoW-forked
+    per repeat (first divergent token lands there); decode blocks are private.
+    The caller must have checked ``request_blocks`` against ``blocks_free`` —
+    allocation never fails mid-build after that.
+
+    Blocks cover written positions only: the final sampled token is returned,
+    never cached, so the last position is ``plen + max_new - 2`` (prefill end
+    for max_new == 1) and sequences never pay for a block that would hold
+    only the unwritten ``plen + max_new - 1`` slot.
+    """
+    bs = allocator.block_size
+    n_logical = max(-(-(plen + max_new - 1) // bs), 1)
+    full_prefix = plen // bs
+    has_partial = plen % bs != 0
+
+    pool_gids: List[int] = []
+    local_of: Dict[int, int] = {}
+
+    def loc(gid: int) -> int:
+        if gid not in local_of:
+            local_of[gid] = len(pool_gids)
+            pool_gids.append(gid)
+        return local_of[gid]
+
+    prefill_rows: List[List[int]] = []
+    decode_rows: List[List[int]] = []
+    seq_gids: List[List[int]] = []
+    copy_src: List[int] = []
+    copy_dst: List[int] = []
+
+    for k in repeats:
+        shared = [allocator.alloc() for _ in range(full_prefix)]
+        part = allocator.alloc() if has_partial else None
+        for _ in range(k - 1):
+            for g in shared:
+                allocator.fork(g)
+            if part is not None:
+                allocator.fork(part)
+        prefill_rows.append([loc(g) for g in shared]
+                            + ([loc(part)] if part is not None else []))
+        for _ in range(k):
+            gids = list(shared)
+            row = [loc(g) for g in shared]
+            if part is not None:
+                wg, copied = allocator.cow(part)
+                if copied:
+                    copy_src.append(local_of[part])
+                    copy_dst.append(loc(wg))
+                gids.append(wg)
+                row.append(loc(wg))
+            while len(row) < n_logical:
+                g = allocator.alloc()
+                gids.append(g)
+                row.append(loc(g))
+            decode_rows.append(row)
+            seq_gids.append(gids)
+
+    return PagedBatchLayout(
+        block_size=bs, n_pool_blocks=len(pool_gids),
+        kv_len=plen + max_new,
+        prefill_table=np.asarray(prefill_rows, np.int32),
+        decode_table=np.asarray(decode_rows, np.int32),
+        copy_src=np.asarray(copy_src, np.int32),
+        copy_dst=np.asarray(copy_dst, np.int32),
+        seq_gids=seq_gids)
+
+
 @dataclass
 class InFlightBatch:
     """One prefilled batch mid-decode: the unit the scheduler interleaves."""
     prompts: List[np.ndarray]
-    repeats: List[int]                 # samples per prompt (KV slots held)
+    repeats: List[int]                 # samples per prompt (KV budget held)
     plen: int
     max_new: int
     temperature: float
@@ -62,6 +270,11 @@ class InFlightBatch:
     step: int                          # tokens sampled so far (>= 1)
     out_toks: List[np.ndarray] = field(default_factory=list)
     out_lps: List[np.ndarray] = field(default_factory=list)
+    # paged state (None in dense mode)
+    paged: Optional[PagedBatchLayout] = None
+    block_table: Optional[jax.Array] = None    # decode table on device
+    prefill_bytes_saved: float = 0.0   # KV bytes prefix sharing did not move
+    freed_seqs: Set[int] = field(default_factory=set)   # early-released rows
 
     @property
     def n_sequences(self) -> int:
@@ -80,18 +293,36 @@ def bucket_key(prompt: np.ndarray, max_new: int,
 
 
 class ExecutionBackend:
-    """Owns model execution state: jitted step functions, KV slot budget,
-    placement history. ``max_slots`` bounds the number of concurrently
-    resident sequences (prompt x samples rows); ``None`` means unbounded
-    (the original engine's behaviour)."""
+    """Owns model execution state: jitted step functions, KV budget,
+    placement history.
+
+    Dense mode: ``max_slots`` bounds concurrently resident sequences
+    (prompt x samples rows); ``None`` means unbounded (the original engine's
+    behaviour). Paged mode (``kv_blocks`` set): a `BlockAllocator` of
+    ``kv_blocks`` blocks of ``kv_block_size`` token slots is the budget —
+    admission prices a request at shared-prefix cost (`request_blocks`), so
+    the k repeats of one prompt pay for their prefix once."""
 
     def __init__(self, model: Model, params, eos_token: Optional[int] = None,
-                 max_slots: Optional[int] = None):
+                 max_slots: Optional[int] = None,
+                 kv_blocks: Optional[int] = None, kv_block_size: int = 16):
         self.model = model
         self.params = params
         self.eos_token = eos_token
         self.max_slots = max_slots
         self.slots_in_use = 0
+        self.allocator: Optional[BlockAllocator] = None
+        if kv_blocks is not None:
+            if not cache_mod.paged_supported(model.cfg):
+                raise ValueError(
+                    f"paged KV cache unsupported for arch "
+                    f"{model.cfg.name!r} (see repro.models.cache."
+                    "paged_supported); use the dense max_slots budget")
+            self.allocator = BlockAllocator(kv_blocks, kv_block_size)
+        # live handles: release() must be called exactly once per started
+        # batch — a second release raises instead of silently driving the
+        # budget negative (the double-release regression).
+        self._live: Dict[int, InFlightBatch] = {}
         # placement hook state (the orchestrator's simulated stage->device
         # plan for whatever is being executed): the scheduler notes the
         # routed operating point per batch; the legacy engine notes its
@@ -100,17 +331,34 @@ class ExecutionBackend:
         self.last_placement = None
         self.placements: Deque = deque(maxlen=256)
         self._prefill_jit = jax.jit(self._prefill)
-        self._decode_jit = jax.jit(self._decode_step)
+        self._decode_jit = jax.jit(self._decode_step,
+                                   static_argnames=("kv_len",))
 
     # ------------------------------------------------------------------ jitted
-    def _prefill(self, params, tokens, cache, extras):
+    def _prefill(self, params, tokens, cache, extras, block_table=None,
+                 copy_src=None, copy_dst=None):
         batch = {"tokens": tokens, **extras}
+        if block_table is not None:
+            batch["block_table"] = block_table
         logits, cache, _ = self.model.forward(params, batch, cache)
+        if copy_src is not None:
+            # CoW fan-out of the shared partial prefix block: fused into the
+            # prefill step so the batch is decode-ready in one dispatch
+            cache = cache_mod.copy_cache_blocks(cache, copy_src, copy_dst)
         return logits[:, -1], cache
 
-    def _decode_step(self, params, tok, pos, cache, rng, temperature, extras):
+    def _decode_step(self, params, tok, step_pos, cache, rng, temperature,
+                     extras, block_table=None, *, kv_len=None):
+        B = tok.shape[0]
+        # positions are built inside the jit from the scalar step counter:
+        # nothing per-step is re-tiled or re-staged on the host
+        pos = jnp.full((B, 1), step_pos, jnp.int32)
+        if self.model.cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
         b = {"tokens": tok, "positions": pos, **extras}
-        logits, cache, _ = self.model.forward(params, b, cache)
+        if block_table is not None:
+            b["block_table"] = block_table
+        logits, cache, _ = self.model.forward(params, b, cache, kv_len=kv_len)
         logits = logits[:, 0].astype(jnp.float32)          # (B, V) or (B, K, V)
         logp = jax.nn.log_softmax(logits, axis=-1)
         sample = jax.random.categorical(rng, logits / temperature, axis=-1)
@@ -120,11 +368,71 @@ class ExecutionBackend:
 
     # ---------------------------------------------------------------- plumbing
     @property
+    def paged(self) -> bool:
+        return self.allocator is not None
+
+    @property
     def slots_free(self) -> Optional[int]:
-        """Remaining KV slot budget (None = unbounded)."""
+        """Remaining KV slot budget (None = unbounded; dense mode only)."""
         if self.max_slots is None:
             return None
         return self.max_slots - self.slots_in_use
+
+    @property
+    def blocks_free(self) -> Optional[int]:
+        return self.allocator.blocks_free if self.allocator else None
+
+    @property
+    def blocks_in_use(self) -> Optional[int]:
+        return self.allocator.blocks_in_use if self.allocator else None
+
+    @property
+    def pool_blocks_resident(self) -> Optional[int]:
+        """Physical pool blocks resident right now: live batches' pools are
+        whole arrays until retirement, so this can exceed ``blocks_in_use``
+        after early releases (the budget frees before the memory does)."""
+        if self.allocator is None:
+            return None
+        return sum(h.paged.n_pool_blocks for h in self._live.values()
+                   if h.paged is not None)
+
+    @property
+    def capacity_free(self) -> Optional[int]:
+        """Admission budget remaining, in this backend's currency: KV blocks
+        (paged) or sequence slots (dense); None = unbounded."""
+        if self.allocator is not None:
+            return self.allocator.blocks_free
+        return self.slots_free
+
+    @property
+    def capacity_total(self) -> Optional[int]:
+        if self.allocator is not None:
+            return self.allocator.n_blocks
+        return self.max_slots
+
+    def request_blocks(self, plen: int, max_new: int, n_samples: int) -> int:
+        """Block cost of a request at shared-prefix price: the full prefix
+        blocks once, plus per-sample privates (the CoW copy of a partial
+        prefix block and the decode blocks). Mirrors `build_paged_layout`
+        exactly — written positions end at ``plen + max_new - 2``."""
+        bs = self.allocator.block_size
+        n_logical = max(-(-(plen + max_new - 1) // bs), 1)
+        full_prefix = plen // bs
+        return full_prefix + n_samples * (n_logical - full_prefix)
+
+    def request_cost(self, plen: int, max_new: int, n_samples: int) -> int:
+        """Admission cost in ``capacity_free`` units (blocks or slots)."""
+        if self.allocator is not None:
+            return self.request_blocks(plen, max_new, n_samples)
+        return n_samples
+
+    @property
+    def kv_token_bytes(self) -> int:
+        """KV bytes one token position costs across the stack (for mapping
+        slot/block budgets to real memory, and the prefill-savings
+        telemetry)."""
+        el = 2 if self.model.dtype == jnp.bfloat16 else 4
+        return cache_mod.kv_bytes_per_token(self.model.cfg, el)
 
     def note_placement(self, placement) -> None:
         self.last_placement = placement
@@ -143,13 +451,23 @@ class ExecutionBackend:
 
         ``n_samples`` may be a single count or one per prompt (mixed-tier
         batches can carry different coverage floors). ``extras`` values are
-        per-prompt rows, tiled to the sequence count here.
+        per-prompt rows, tiled to the sequence count here — once; decode
+        steps reuse the tiled arrays.
+
+        Paged mode prefills one row per *prompt* and fans the result out to
+        the repeats through shared prefix blocks (+ a tiled first-token
+        sample, bit-identical to prefilling every repeat).
         """
         extras = extras or {}
         mc = self._multi_codebook
         repeats = ([int(n_samples)] * len(prompts)
                    if isinstance(n_samples, int) else
                    [int(n) for n in n_samples])
+        if not prompts or any(k < 1 for k in repeats):
+            # a 0-sample request would allocate prefix blocks that no
+            # sequence references (and so could never release)
+            raise ValueError("start_batch needs >= 1 prompt and >= 1 "
+                             f"sample per prompt (got repeats={repeats})")
         plen = len(prompts[0])
         if any(len(p) != plen for p in prompts):
             raise ValueError("start_batch requires equal-length prompts "
@@ -158,8 +476,21 @@ class ExecutionBackend:
         rep: Union[int, np.ndarray] = \
             repeats[0] if uniform else np.asarray(repeats)
         base = np.stack(list(prompts))                      # (R, L[,K])
+        B = int(sum(repeats))
+
+        if self.allocator is not None:
+            h = self._start_batch_paged(prompts, repeats, rep, base, B, plen,
+                                        max_new, temperature, rng, extras, mc)
+        else:
+            h = self._start_batch_dense(prompts, repeats, rep, base, B, plen,
+                                        max_new, temperature, rng, extras, mc)
+        self._live[id(h)] = h
+        return h
+
+    def _start_batch_dense(self, prompts, repeats, rep, base, B, plen,
+                           max_new, temperature, rng, extras,
+                           mc) -> InFlightBatch:
         tokens = np.repeat(base, rep, axis=0)               # (B, L[,K])
-        B = tokens.shape[0]
         if self.max_slots is not None and \
                 self.slots_in_use + B > self.max_slots:
             raise RuntimeError(
@@ -187,28 +518,128 @@ class ExecutionBackend:
             out_toks=[np.asarray(tok)],
             out_lps=[np.asarray(lp if not mc else lp.mean(-1))])
 
+    def _start_batch_paged(self, prompts, repeats, rep, base, B, plen,
+                           max_new, temperature, rng, extras,
+                           mc) -> InFlightBatch:
+        R = len(prompts)
+        need = sum(self.request_blocks(plen, max_new, k) for k in repeats)
+        if need > self.allocator.blocks_free:
+            raise RuntimeError(
+                f"KV block budget exceeded: need {need} > "
+                f"{self.allocator.blocks_free} free (scheduler must check "
+                "blocks_free)")
+        layout = build_paged_layout(self.allocator, plen, max_new, repeats)
+        try:
+            cache = self.model.init_paged_cache(layout.n_pool_blocks,
+                                                layout.block_size)
+            # prefill rows are the unique prompts (extras per-prompt as-is);
+            # decode rows are the tiled sequences — both tiled exactly once
+            prefill_extras = {k: jnp.asarray(v) for k, v in extras.items()}
+            decode_extras = {k: jnp.repeat(jnp.asarray(v), rep, axis=0)
+                             for k, v in extras.items()}
+            has_cow = layout.copy_src.size > 0
+            last_logits, cache = self._prefill_jit(
+                self.params, jnp.asarray(base), cache, prefill_extras,
+                jnp.asarray(layout.prefill_table),
+                jnp.asarray(layout.copy_src) if has_cow else None,
+                jnp.asarray(layout.copy_dst) if has_cow else None)
+        except BaseException:
+            # no handle exists yet to release() — return every reference the
+            # layout took, or a failed prefill permanently shrinks the budget
+            for gids in layout.seq_gids:
+                for g in gids:
+                    self.allocator.free(g)
+            raise
+
+        # fan the unique-prompt logits out to the repeats, then sample with
+        # the same key/shape as the dense path — bit-identical first token
+        rng, sub = jax.random.split(rng)
+        lf = jnp.repeat(last_logits.astype(jnp.float32), rep, axis=0)
+        logp0 = jax.nn.log_softmax(lf, axis=-1)
+        tok = jax.random.categorical(sub, lf / temperature, axis=-1)
+        lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
+
+        return InFlightBatch(
+            prompts=list(prompts), repeats=repeats, plen=plen,
+            max_new=max_new, temperature=temperature, rng=rng,
+            extras=decode_extras, cache=cache, tok=tok, step=1,
+            out_toks=[np.asarray(tok)],
+            out_lps=[np.asarray(lp if not mc else lp.mean(-1))],
+            paged=layout, block_table=jnp.asarray(layout.decode_table),
+            prefill_bytes_saved=float((B - R) * plen * self.kv_token_bytes))
+
     def decode_step(self, h: InFlightBatch) -> bool:
         """Advance one token; returns True while the batch still has decode
         steps left (so ``while backend.decode_step(h): pass`` drains it)."""
         if h.done:
             return False
         mc = self._multi_codebook
-        B = h.n_sequences
         h.rng, sub = jax.random.split(h.rng)
-        pos = jnp.full((B, 1), h.plen + h.step - 1, jnp.int32)
-        if self.model.cfg.mrope_sections:
-            pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+        step_pos = jnp.asarray(h.plen + h.step - 1, jnp.int32)
         tok_in = h.tok[:, None] if not mc else h.tok[:, None, :]
         h.tok, lp, h.cache = self._decode_jit(
-            self.params, tok_in, pos, h.cache, sub, h.temperature, h.extras)
+            self.params, tok_in, step_pos, h.cache, sub, h.temperature,
+            h.extras, h.block_table,
+            kv_len=h.paged.kv_len if h.paged is not None else None)
         h.out_toks.append(np.asarray(h.tok))
         h.out_lps.append(np.asarray(lp if not mc else lp.mean(-1)))
         h.step += 1
         return not h.done
 
+    def release(self, h: InFlightBatch) -> None:
+        """Return a batch's remaining KV budget (blocks or slots). Raises on
+        an unknown or already-released handle — a double release must fail
+        loudly instead of silently driving the budget negative."""
+        if self._live.pop(id(h), None) is None:
+            raise RuntimeError("release of unknown or already-released "
+                               "batch handle")
+        if h.paged is not None:
+            for i, gids in enumerate(h.paged.seq_gids):
+                if i in h.freed_seqs:
+                    continue
+                for g in gids:
+                    self.allocator.free(g)
+        else:
+            self.slots_in_use -= h.n_sequences - len(h.freed_seqs)
+        h.freed_seqs = set(range(h.n_sequences))
+
+    def release_sequences(self, h: InFlightBatch,
+                          seq_indices: Sequence[int]) -> int:
+        """Early-release finished sequences' KV budget (CSVET early stop:
+        once one sample of a prompt verifies, the remaining repeats cannot
+        change pass@k). The batch keeps decoding with its static shapes, but
+        the released rows' blocks/slots are free for new admissions *now*
+        instead of at batch retirement. Returns blocks (or slots) actually
+        returned to the budget; shared prefix blocks only come back with
+        their last holder.
+
+        Note this frees *budget*, not bytes: the batch's physical pool is
+        one array, resident until retirement (`pool_blocks_resident`), so
+        admissions riding on early-released budget transiently overcommit
+        by at most the released count — see `BlockAllocator`."""
+        if id(h) not in self._live:
+            raise RuntimeError("release_sequences on unknown or "
+                               "already-released batch handle")
+        bad = [i for i in seq_indices if not 0 <= i < h.n_sequences]
+        if bad:
+            raise ValueError(f"sequence indices {bad} out of range for a "
+                             f"{h.n_sequences}-sequence batch")
+        freed = 0
+        for i in seq_indices:
+            if i in h.freed_seqs:
+                continue
+            h.freed_seqs.add(i)
+            if h.paged is not None:
+                freed += sum(self.allocator.free(g)
+                             for g in h.paged.seq_gids[i])
+            else:
+                self.slots_in_use -= 1
+                freed += 1
+        return freed
+
     def finalize(self, h: InFlightBatch) -> List[GenerationResult]:
         """Stack per-step samples into per-request results and release the
-        batch's KV slots."""
+        batch's KV budget."""
         mc = self._multi_codebook
         toks = np.stack(h.out_toks, axis=1)                 # (B, T[,K])
         lps = np.stack(h.out_lps, axis=1)                   # (B, T)
@@ -228,7 +659,7 @@ class ExecutionBackend:
                 prefill_tokens=h.plen,
                 decode_tokens=int(np.prod(toks.shape[1:2])) * ns,
             ))
-        self.slots_in_use -= h.n_sequences
+        self.release(h)
         return results
 
     def _truncate(self, sample: np.ndarray) -> np.ndarray:

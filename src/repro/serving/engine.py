@@ -78,12 +78,33 @@ class ServingEngine:
             by_len.setdefault(len(p), []).append(i)
 
         for plen, idxs in by_len.items():
-            rng, sub = jax.random.split(rng)
-            h = self.backend.start_batch([prompts[i] for i in idxs],
-                                         n_samples, max_new, temp, sub,
-                                         extras)
-            while self.backend.decode_step(h):
-                pass
-            for i, r in zip(idxs, self.backend.finalize(h)):
-                results[i] = r
+            for chunk in self._budget_chunks(idxs, plen, n_samples, max_new):
+                rng, sub = jax.random.split(rng)
+                row_extras = {k: np.asarray(v)[chunk]
+                              for k, v in extras.items()}
+                h = self.backend.start_batch([prompts[i] for i in chunk],
+                                             n_samples, max_new, temp, sub,
+                                             row_extras)
+                while self.backend.decode_step(h):
+                    pass
+                for i, r in zip(chunk, self.backend.finalize(h)):
+                    results[i] = r
         return results  # type: ignore[return-value]
+
+    def _budget_chunks(self, idxs: List[int], plen: int, n_samples: int,
+                       max_new: int) -> List[List[int]]:
+        """Split one prompt-length group so every chunk fits the backend's
+        KV budget (blocks or slots); an unbounded backend keeps the whole
+        group as one batch (the pre-refactor behaviour, bit-identical rng
+        stream)."""
+        capacity = getattr(self.backend, "capacity_total", None)
+        if capacity is None:
+            return [idxs]
+        cost = self.backend.request_cost(plen, max_new, n_samples)
+        if cost > capacity:
+            raise ValueError(
+                f"one request needs {cost} KV budget units but the backend "
+                f"only has {capacity}; lower n_samples/max_new_tokens or "
+                "raise the budget")
+        per_chunk = max(1, capacity // cost)
+        return [idxs[i:i + per_chunk] for i in range(0, len(idxs), per_chunk)]

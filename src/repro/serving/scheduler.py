@@ -21,6 +21,14 @@ policy layer that closes that gap:
   any feasible point at that size — a tight-SLA member caps how much
   batching its batch can absorb instead of silently blowing its cap.
 
+Admission is costed in the backend's own KV currency: a paged backend
+prices a request in *blocks* at shared-prefix cost (`request_cost` — the
+k repeats a tier's coverage floor demands share their prefix blocks, so a
+raised sampling budget is far cheaper than k dense slots), a dense backend
+in sequence slots; `early_stop` releases a request's remaining samples'
+blocks the moment a CSVET verifier confirms a pass, instead of waiting for
+batch retirement.
+
 Routing happens only at batch *formation*: a drift-triggered re-anneal
 (`ControlLoop` calls ``on_reorchestrate``) therefore takes effect at the
 next batch boundary — in-flight batches finish on the plan they were priced
@@ -51,6 +59,8 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.backend import bucket_key as _default_bucket_key
+
+_MISSING = object()    # getattr sentinel: absent attr vs attr that is None
 
 
 @dataclass
@@ -106,6 +116,8 @@ class BatchRecord:
     latency_s: float                   # batch service makespan
     meets_caps: bool
     reroute: bool                      # first batch after a re-anneal
+    kv_blocks_in_use: Optional[int] = None   # paged backend occupancy
+    prefill_bytes_saved: float = 0.0   # KV bytes prefix sharing avoided
 
 
 @dataclass(eq=False)
@@ -143,7 +155,14 @@ class RequestQueue:
                max_new_tokens: int = 32, temperature: float = 0.8,
                rng=None, extras: Optional[Dict] = None,
                arrival_s: float = 0.0,
-               max_sequences: Optional[int] = None) -> AdmissionResult:
+               budget: Optional[int] = None,
+               cost=None) -> AdmissionResult:
+        """``budget``/``cost`` bound admission in the backend's KV currency:
+        ``cost(plen, max_new, n_samples)`` (default: ``n_samples``, the
+        dense slot count) is priced *after* any coverage-floor raise and
+        rejected at the door when it can never fit ``budget``."""
+        if n_samples < 1:
+            raise ValueError(f"n_samples must be >= 1 (got {n_samples})")
         if self.router is not None and isinstance(tier, str):
             try:
                 tier = self.router.resolve_tier(tier)
@@ -166,14 +185,18 @@ class RequestQueue:
             floor = self.router.required_samples(tier)
             if floor is not None and floor > n_samples:
                 n_samples, raised = floor, floor
-        if max_sequences is not None and n_samples > max_sequences:
-            # a request that can never fit the backend's KV slot budget is
-            # rejected at the door instead of wedging the batch former
-            res = AdmissionResult(
-                False, reason=f"n_samples={n_samples} exceeds the KV slot "
-                              f"budget ({max_sequences})")
-            self.rejections.append(res)
-            return res
+        if budget is not None:
+            c = (cost(len(prompt), max_new_tokens, n_samples)
+                 if cost is not None else n_samples)
+            if c > budget:
+                # a request that can never fit the backend's KV budget is
+                # rejected at the door instead of wedging the batch former
+                res = AdmissionResult(
+                    False, reason=f"admission cost {c} (n_samples="
+                                  f"{n_samples}) exceeds the KV budget "
+                                  f"({budget})")
+                self.rejections.append(res)
+                return res
         req = ServeRequest(self._next_id, prompt, tier, n_samples,
                            max_new_tokens, temperature, rng=rng,
                            extras=extras, arrival_s=arrival_s,
@@ -204,23 +227,26 @@ class RequestQueue:
 
     # ----------------------------------------------------------- batching
     def pop_batch(self, max_requests: int,
-                  max_sequences: Optional[int] = None) -> List[ServeRequest]:
+                  budget: Optional[int] = None,
+                  cost=None) -> List[ServeRequest]:
         """Pop the next batch: oldest bucket first, FIFO within it (which is
         FIFO within every tier), bounded by request count and the backend's
-        free KV slots. Never mixes buckets."""
+        free KV budget — ``cost(req)`` prices each member (default: its
+        sample count, the dense slot cost; a paged backend prices blocks at
+        shared-prefix cost). Never mixes buckets."""
         key = self._oldest_bucket()
         if key is None:
             return []
         q = self._buckets[key]
         out: List[ServeRequest] = []
-        seqs = 0
+        used = 0
         while q and len(out) < max_requests:
             head = q[0]
-            if max_sequences is not None and \
-                    seqs + head.n_samples > max_sequences:
-                break      # head waits for slots to free (retiring batches)
+            c = cost(head) if cost is not None else head.n_samples
+            if budget is not None and used + c > budget:
+                break      # head waits for budget to free (retiring batches)
             out.append(q.popleft())
-            seqs += head.n_samples
+            used += c
             self._depth[head.tier_name] -= 1
         return out
 
@@ -279,6 +305,26 @@ class ContinuousBatchingScheduler:
         self._base_rng = None          # lazily: jax import only when needed
 
     # ----------------------------------------------------------- admission
+    def _capacity_free(self) -> Optional[int]:
+        """Backend KV budget remaining (blocks or slots); falls back to the
+        legacy ``slots_free`` for duck-typed stub backends."""
+        cap = getattr(self.backend, "capacity_free", _MISSING)
+        if cap is _MISSING:
+            cap = self.backend.slots_free
+        return cap
+
+    def _capacity_total(self) -> Optional[int]:
+        cap = getattr(self.backend, "capacity_total", _MISSING)
+        if cap is _MISSING:
+            cap = getattr(self.backend, "max_slots", None)
+        return cap
+
+    def _request_cost(self, req: ServeRequest) -> int:
+        rc = getattr(self.backend, "request_cost", None)
+        if rc is None:
+            return req.n_samples
+        return rc(len(req.prompt), req.max_new_tokens, req.n_samples)
+
     def submit(self, prompt: np.ndarray, tier, n_samples: int = 1,
                max_new_tokens: Optional[int] = None,
                temperature: Optional[float] = None, rng=None,
@@ -292,7 +338,8 @@ class ContinuousBatchingScheduler:
                          else self.config.temperature),
             rng=rng, extras=extras,
             arrival_s=self.clock if arrival_s is None else arrival_s,
-            max_sequences=getattr(self.backend, "max_slots", None))
+            budget=self._capacity_total(),
+            cost=getattr(self.backend, "request_cost", None))
 
     # ------------------------------------------------------------- control
     def on_reorchestrate(self, healthy: Optional[Sequence[str]] = None
@@ -331,10 +378,11 @@ class ContinuousBatchingScheduler:
         return jax.random.split(base)[1]
 
     def _form_batch(self) -> Optional[_InflightEntry]:
-        free = self.backend.slots_free
+        free = self._capacity_free()
         if free is not None and free <= 0:
             return None
-        reqs = self.queue.pop_batch(self.config.max_batch_requests, free)
+        reqs = self.queue.pop_batch(self.config.max_batch_requests, free,
+                                    self._request_cost)
         if not reqs:
             return None
         # extras compatibility: one batch stacks one set of per-request
@@ -391,7 +439,10 @@ class ContinuousBatchingScheduler:
             queue_delay_s=max(start - r.arrival_s for r in reqs),
             point_index=decision.point_index,
             energy_j=decision.energy_j, latency_s=decision.latency_s,
-            meets_caps=decision.meets_caps, reroute=self._reroute_pending)
+            meets_caps=decision.meets_caps, reroute=self._reroute_pending,
+            kv_blocks_in_use=getattr(self.backend, "blocks_in_use", None),
+            prefill_bytes_saved=float(getattr(handle, "prefill_bytes_saved",
+                                              0.0)))
         self._reroute_pending = False
         self._batch_id += 1
         self.records.append(record)
@@ -399,6 +450,34 @@ class ContinuousBatchingScheduler:
             self.trace.ingest_serve(record,
                                     signals=plan_signals(decision))
         return _InflightEntry(handle, reqs, decision, record, start, done_t)
+
+    def early_stop(self, request_id: int,
+                   sample_indices: Optional[Sequence[int]] = None) -> int:
+        """CSVET early-stop hook: a verified pass makes a request's
+        remaining samples moot (pass@k is ``any(pass)``), so release their
+        KV budget *now* instead of at batch retirement. ``sample_indices``
+        selects which of the request's samples to release (default: all).
+        Returns the blocks/slots actually returned to the budget (0 when
+        the request is not in flight or the backend has no early release)."""
+        rel = getattr(self.backend, "release_sequences", None)
+        if rel is None:
+            return 0
+        for entry in self.inflight:
+            off = 0
+            for r in entry.requests:
+                if r.id == request_id:
+                    idxs = (range(r.n_samples) if sample_indices is None
+                            else list(sample_indices))
+                    bad = [i for i in idxs if not 0 <= i < r.n_samples]
+                    if bad:
+                        # an out-of-range index would map into a *different*
+                        # request's rows and release its KV budget under it
+                        raise ValueError(
+                            f"sample indices {bad} out of range for request "
+                            f"{request_id} with {r.n_samples} samples")
+                    return rel(entry.handle, [off + i for i in idxs])
+                off += r.n_samples
+        return 0
 
     def _retire(self, entry: _InflightEntry) -> None:
         results = self.backend.finalize(entry.handle)

@@ -392,7 +392,7 @@ def test_oversized_request_rejected_not_crashed():
         backend, _StubRouter(_tiers3()),
         SchedulerConfig(max_batch_requests=8, max_new_tokens=4))
     bad = sched.submit(_prompt(8), tier="economy", n_samples=5)
-    assert not bad.admitted and "slot budget" in bad.reason
+    assert not bad.admitted and "exceeds the KV budget" in bad.reason
     ok = sched.submit(_prompt(8), tier="economy", n_samples=4)
     assert ok.admitted
     sched.run_until_idle()
