@@ -52,12 +52,16 @@ def _tpu_roofline_us(flops: float, bytes_moved: float) -> float:
 
 
 def _records(kernel: str, reps: List[float], flops: float,
-             bytes_moved: float) -> List[dict]:
+             bytes_moved: float, quant: str = "fp32") -> List[dict]:
+    # quant stamps the numeric format the kernel ran at; the calibration
+    # fitter keys quantized formats as "<kernel>:<quant>" (full-precision
+    # records keep the bare kernel name — see telemetry.fit._eta_key)
     roofline = _tpu_roofline_us(flops, bytes_moved)
     return [{"kind": "kernel", "kernel": kernel, "rep": i,
              "flops": flops, "bytes": bytes_moved,
              "measured_us": us, "roofline_us": roofline,
-             "device": TPU_V5E.name, "backend": "cpu-interpret"}
+             "device": TPU_V5E.name, "backend": "cpu-interpret",
+             "quant": quant}
             for i, us in enumerate(reps)]
 
 
@@ -125,6 +129,32 @@ def run(verbose: bool = True) -> Dict:
     rows.append(["ssd_scan", f"{us:.0f}",
                  f"{_tpu_roofline_us(fl_s, by_s):.0f} (32k scan/chip)"])
     results["ssd_scan_us"] = us
+
+    # fused dequant-matmul: weight streaming at packed bytes (repro.quant)
+    from repro.kernels.dequant_matmul.dequant_matmul import (
+        dequant_matmul_int4_pallas, dequant_matmul_int8_pallas)
+    from repro.quant import quantize_int4, quantize_int8
+    M, Kd, Nd = 8, 256, 256
+    xq = jax.random.normal(ks[0], (M, Kd), jnp.float32)
+    wq = jax.random.normal(ks[1], (Kd, Nd), jnp.float32)
+    fl_q = 2.0 * M * Kd * Nd
+    # production shape: one llama-8b-class 4096x4096 decode projection
+    fl_p = 2.0 * 8 * 4096 * 4096
+    for fmt, quantize, kern, wbytes, wbytes_p in (
+            ("int8", quantize_int8, dequant_matmul_int8_pallas,
+             Kd * Nd, 4096 * 4096),
+            ("int4", lambda w: quantize_int4(w, 32),
+             dequant_matmul_int4_pallas, Kd * Nd // 2, 4096 * 4096 // 2)):
+        qw, sc = quantize(wq)
+        reps = _time_reps(kern, xq, qw, sc, interpret=True)
+        us = float(np.mean(reps))
+        by_q = wbytes + sc.size * 4 + (M * Kd + M * Nd) * 4
+        results["records"] += _records("dequant_matmul", reps, fl_q, by_q,
+                                       quant=fmt)
+        by_p = wbytes_p + 8 * 2 * 4096 * 2
+        rows.append([f"dequant_matmul[{fmt}]", f"{us:.0f}",
+                     f"{_tpu_roofline_us(fl_p, by_p):.0f} (4k proj/chip)"])
+        results[f"dequant_matmul_{fmt}_us"] = us
 
     if verbose:
         print(fmt_table(["kernel", "interpret us/call",

@@ -41,6 +41,7 @@ BENCHES = [
     ("serving_schedule", "benchmarks.serving_schedule",
      "acceptance_all"),
     ("kv_paging", "benchmarks.kv_paging", "acceptance_all"),
+    ("quant_serving", "benchmarks.quant_serving", "acceptance_all"),
 ]
 
 

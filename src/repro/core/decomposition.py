@@ -15,7 +15,7 @@ Byte-accounting conventions:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.models.config import ArchConfig
 
@@ -26,13 +26,22 @@ class Workload:
     prompt_tokens: int = 128      # T_in per sample
     decode_tokens: int = 128      # T_out per sample
     samples: int = 1              # S (repeated sampling)
-    bytes_per_param: float = 2.0  # quantization: 2=bf16, 1=fp8/int8
+    bytes_per_param: float = 2.0  # quantization: 2=bf16, 1=fp8/int8, 0.5=int4
     bytes_per_act: float = 2.0
+    bytes_per_kv: Optional[float] = None  # KV-cache element bytes (int8 KV=1);
+                                          # None -> bytes_per_act
+
+    @property
+    def kv_bytes_per_el(self) -> float:
+        return self.bytes_per_act if self.bytes_per_kv is None \
+            else self.bytes_per_kv
 
     @property
     def quant_factor(self) -> float:
-        """Paper's f(Q): FP16 -> 1.0, FP8 -> 0.65."""
-        return 1.0 if self.bytes_per_param >= 2.0 else 0.65
+        """Paper's f(Q): FP16 -> 1.0, FP8/INT8 -> 0.65, INT4 -> 0.45."""
+        if self.bytes_per_param >= 2.0:
+            return 1.0
+        return 0.65 if self.bytes_per_param >= 1.0 else 0.45
 
     @property
     def n_prefill_tokens(self) -> int:
@@ -83,7 +92,7 @@ def _attn_counts(cfg: ArchConfig, w: Workload, decode: bool
             absorb = 2 * H * m.qk_nope_head_dim * m.kv_lora_rank * 2
             attn = 2 * H * ctx * (m.kv_lora_rank + m.qk_rope_head_dim) * 2
             flops = proj + absorb + attn + out
-            cache = ctx * (m.kv_lora_rank + m.qk_rope_head_dim) * bpa
+            cache = ctx * (m.kv_lora_rank + m.qk_rope_head_dim) * w.kv_bytes_per_el
         else:        # decompressed (MXU-friendly)
             dec = 2 * m.kv_lora_rank * H * (m.qk_nope_head_dim + m.v_head_dim)
             attn = 2 * H * ctx * (qd + m.v_head_dim)
@@ -93,7 +102,7 @@ def _attn_counts(cfg: ArchConfig, w: Workload, decode: bool
         proj = 2 * d * hd * (H + 2 * kv) + 2 * H * hd * d
         attn = 2 * H * ctx * hd * 2
         flops = proj + attn
-        cache = (ctx * 2 * kv * hd * bpa) if decode else 0.0
+        cache = (ctx * 2 * kv * hd * w.kv_bytes_per_el) if decode else 0.0
         pbytes = (d * hd * (H + 2 * kv) + H * hd * d) * bpp
 
     if cfg.cross_attention:

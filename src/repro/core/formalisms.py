@@ -65,9 +65,17 @@ def samples_for_coverage(C_target: float, N: float, T: float,
 GAMMA_E = 0.9
 
 
+QUANT_FACTORS = {"fp32": 1.35, "fp16": 1.0, "bf16": 1.0, "fp8": 0.65,
+                 "int8": 0.65, "int4": 0.45}
+
+
 def quant_factor(q: str) -> float:
-    return {"fp32": 1.35, "fp16": 1.0, "bf16": 1.0, "fp8": 0.65,
-            "int8": 0.65, "int4": 0.45}[q.lower()]
+    try:
+        return QUANT_FACTORS[q.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantization format {q!r} "
+            f"(supported: {', '.join(sorted(QUANT_FACTORS))})") from None
 
 
 def energy_total(S: float, N: float, T: float, q: str,

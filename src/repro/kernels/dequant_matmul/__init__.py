@@ -1,0 +1,12 @@
+from repro.kernels.dequant_matmul.dequant_matmul import (
+    dequant_matmul_int4_pallas, dequant_matmul_int8_pallas)
+from repro.kernels.dequant_matmul.ops import dequant_matmul
+from repro.kernels.dequant_matmul.ref import (dequant_matmul_int4_ref,
+                                              dequant_matmul_int8_ref,
+                                              dequantize_int4,
+                                              dequantize_int8, unpack_int4)
+
+__all__ = ["dequant_matmul", "dequant_matmul_int8_pallas",
+           "dequant_matmul_int4_pallas", "dequant_matmul_int8_ref",
+           "dequant_matmul_int4_ref", "dequantize_int8", "dequantize_int4",
+           "unpack_int4"]

@@ -1,0 +1,142 @@
+"""Fused dequant-matmul Pallas TPU kernels (weight-only int8 / packed int4).
+
+HBM traffic for the weight operand is the *packed* bytes: the kernel reads
+int8 (or nibble-packed uint8) tiles plus their scales and dequantizes
+in-register, so decode weight streaming moves 2x (int8) or 4x (int4) fewer
+bytes than bf16 — exactly the byte reduction the paper's 4-bit IPW headline
+rides on.
+
+Both kernels run a (m, n, k) grid with the contraction innermost (the
+`repro.kernels.moe_gemm` pattern): an f32 VMEM accumulator is zeroed at
+``k == 0`` and written out at the last k step.
+
+* int8 (per-out-channel scales): the scale folds out of the k-sum exactly, so
+  raw integer products accumulate and one multiply by ``scale[n]`` happens at
+  write-out.
+* int4 (group-wise scales): ``block_k`` equals the quantization group size,
+  so each grid step covers exactly one scale group. The packed rows stay
+  packed — the even input rows multiply the low nibbles and the odd rows the
+  high nibbles, which avoids materializing an interleaved unpacked tile:
+
+      acc += (x_even @ lo + x_odd @ hi) * scale[g]
+
+Inputs are padded to block multiples (outputs sliced back); K never needs
+padding for int4 because quantization guarantees ``K % group_size == 0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_kernel(x_ref, qw_ref, scale_ref, o_ref, acc_ref):
+    k, nk = pl.program_id(2), pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, bk)
+    w = qw_ref[...].astype(jnp.float32)           # (bk, bn) dequant sans scale
+    acc_ref[...] += jax.lax.dot(x, w)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] * scale_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def dequant_matmul_int8_pallas(x: jnp.ndarray, qw: jnp.ndarray,
+                               scale: jnp.ndarray, *, block_m: int = 128,
+                               block_n: int = 128, block_k: int = 128,
+                               interpret: bool = False) -> jnp.ndarray:
+    """x (M, K) float, qw (K, N) int8, scale (N,) f32 -> (M, N) in x.dtype."""
+    M, K = x.shape
+    N = qw.shape[1]
+    bm = min(block_m, max(M, 8))
+    bn = min(block_n, max(N, 128))
+    bk = min(block_k, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    qwp = jnp.pad(qw, ((0, pk), (0, pn)))
+    sp = jnp.pad(scale.astype(jnp.float32), (0, pn)).reshape(1, -1)
+    grid = ((M + pm) // bm, (N + pn) // bn, (K + pk) // bk)
+    out = pl.pallas_call(
+        _int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, qwp, sp)
+    return out[:M, :N]
+
+
+def _int4_kernel(x_ref, qw_ref, scale_ref, o_ref, acc_ref):
+    g, ng = pl.program_id(2), pl.num_programs(2)
+
+    @pl.when(g == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, gs)
+    bm, gs = x.shape
+    xt = x.reshape(bm, gs // 2, 2)                # even/odd input rows
+    p = qw_ref[...]                               # (gs//2, bn) packed uint8
+    lo = (((p & 0xF).astype(jnp.int32) ^ 8) - 8).astype(jnp.float32)
+    hi = (((p >> 4).astype(jnp.int32) ^ 8) - 8).astype(jnp.float32)
+    part = jax.lax.dot(xt[:, :, 0], lo) + jax.lax.dot(xt[:, :, 1], hi)
+    acc_ref[...] += part * scale_ref[...]         # one scale group per step
+
+    @pl.when(g == ng - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def dequant_matmul_int4_pallas(x: jnp.ndarray, packed: jnp.ndarray,
+                               scale: jnp.ndarray, *, block_m: int = 128,
+                               block_n: int = 128,
+                               interpret: bool = False) -> jnp.ndarray:
+    """x (M, K) float, packed (K//2, N) uint8, scale (G, N) f32 -> (M, N).
+
+    The group size ``K // G`` is implied by the shapes; it must be even (the
+    quantizer guarantees this — two rows pack per byte).
+    """
+    M, K = x.shape
+    N = packed.shape[1]
+    G = scale.shape[0]
+    gs = K // G
+    bm = min(block_m, max(M, 8))
+    bn = min(block_n, max(N, 128))
+    pm, pn = (-M) % bm, (-N) % bn
+    xp = jnp.pad(x, ((0, pm), (0, 0)))
+    # zero nibbles decode to 0 ((0 ^ 8) - 8 == 0), so N-padding is inert
+    qp = jnp.pad(packed, ((0, 0), (0, pn)))
+    sp = jnp.pad(scale.astype(jnp.float32), ((0, 0), (0, pn)))
+    grid = ((M + pm) // bm, (N + pn) // bn, G)
+    out = pl.pallas_call(
+        _int4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, gs), lambda i, j, g: (i, g)),
+            pl.BlockSpec((gs // 2, bn), lambda i, j, g: (g, j)),
+            pl.BlockSpec((1, bn), lambda i, j, g: (g, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, qp, sp)
+    return out[:M, :N]

@@ -1,0 +1,50 @@
+"""Jitted dispatch for the fused dequant-matmul.
+
+Format is discriminated by the quantized-weight dtype (no side metadata, so
+the dispatch survives `jax.lax.scan` over stacked per-layer params): ``int8``
+means per-out-channel int8, ``uint8`` means nibble-packed group-wise int4.
+
+On TPU the fused Pallas kernel runs (HBM moves the packed bytes); everywhere
+else the jnp oracle runs directly — unlike the attention ops wrappers this
+does *not* interpret the kernel on CPU, because the oracle's dequantize-
+then-matmul rounding is the semantics the serving bit-parity test pins and
+interpret-mode parity is covered by ``tests/test_quant.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dequant_matmul.dequant_matmul import (
+    dequant_matmul_int4_pallas, dequant_matmul_int8_pallas)
+from repro.kernels.dequant_matmul.ref import (dequant_matmul_int4_ref,
+                                              dequant_matmul_int8_ref,
+                                              dequantize_int4,
+                                              dequantize_int8, unpack_int4)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def dequant_matmul(x: jnp.ndarray, qw: jnp.ndarray,
+                   scale: jnp.ndarray) -> jnp.ndarray:
+    """``x (..., K) @ dequantize(qw, scale) -> (..., N)`` in x.dtype."""
+    lead = x.shape[:-1]
+    if qw.dtype == jnp.uint8:
+        if _on_tpu():
+            y = dequant_matmul_int4_pallas(x.reshape(-1, x.shape[-1]),
+                                           qw, scale)
+            return y.reshape(*lead, y.shape[-1])
+        return dequant_matmul_int4_ref(x, qw, scale)
+    if _on_tpu():
+        y = dequant_matmul_int8_pallas(x.reshape(-1, x.shape[-1]), qw, scale)
+        return y.reshape(*lead, y.shape[-1])
+    return dequant_matmul_int8_ref(x, qw, scale)
+
+
+__all__ = ["dequant_matmul", "dequant_matmul_int8_pallas",
+           "dequant_matmul_int4_pallas", "dequant_matmul_int8_ref",
+           "dequant_matmul_int4_ref", "dequantize_int8", "dequantize_int4",
+           "unpack_int4"]

@@ -1,0 +1,55 @@
+"""jnp oracle for the fused dequant-matmul kernel.
+
+Semantics contract: **dequantize, then matmul, in f32**. The order matters —
+``(x @ qw) * scale`` rounds differently from ``x @ (qw * scale)``, and the
+serving bit-parity test (quantized generate vs generate over dequantized f32
+params) pins the latter. The Pallas kernels in ``dequant_matmul.py`` are held
+to numerical tolerance against this oracle, not bitwise.
+
+Packing convention (shared with `repro.quant.quantize.pack_int4`): two
+consecutive input rows per byte — packed row ``r`` holds original row ``2r``
+in the low nibble and row ``2r + 1`` in the high nibble, values sign-extended
+from [-8, 7] two's complement.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., K//2, N) uint8 -> (..., K, N) int8 in [-8, 7]."""
+    lo = ((packed & 0xF).astype(jnp.int32) ^ 8) - 8
+    hi = ((packed >> 4).astype(jnp.int32) ^ 8) - 8
+    q = jnp.stack([lo, hi], axis=-2)            # (..., K//2, 2, N)
+    return q.reshape(*packed.shape[:-2], 2 * packed.shape[-2],
+                     packed.shape[-1]).astype(jnp.int8)
+
+
+def dequantize_int8(qw: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Per-out-channel int8 -> f32: ``w[k, n] = qw[k, n] * scale[n]``."""
+    return qw.astype(jnp.float32) * scale[..., None, :].astype(jnp.float32)
+
+
+def dequantize_int4(packed: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Group-wise packed int4 -> f32. ``scale`` (..., G, N) covers groups of
+    ``K // G`` consecutive input rows."""
+    q = unpack_int4(packed).astype(jnp.float32)   # (..., K, N)
+    K, N = q.shape[-2], q.shape[-1]
+    G = scale.shape[-2]
+    grouped = q.reshape(*q.shape[:-2], G, K // G, N)
+    w = grouped * scale[..., :, None, :].astype(jnp.float32)
+    return w.reshape(q.shape)
+
+
+def dequant_matmul_int8_ref(x: jnp.ndarray, qw: jnp.ndarray,
+                            scale: jnp.ndarray) -> jnp.ndarray:
+    """x (..., K) @ dequantize_int8(qw (K, N), scale (N,)) -> (..., N)."""
+    w = dequantize_int8(qw, scale)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def dequant_matmul_int4_ref(x: jnp.ndarray, packed: jnp.ndarray,
+                            scale: jnp.ndarray) -> jnp.ndarray:
+    """x (..., K) @ dequantize_int4(packed (K//2, N), scale (G, N))."""
+    w = dequantize_int4(packed, scale)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

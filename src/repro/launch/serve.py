@@ -52,6 +52,15 @@ def main() -> None:
                          "across repeated samples; supported archs only)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="paged KV cache: token slots per block")
+    ap.add_argument("--quant", default="bf16",
+                    choices=["bf16", "int8", "int4"],
+                    help="weight-only serving format (repro.quant): linear "
+                         "layers run the fused dequant-matmul kernel")
+    ap.add_argument("--group-size", type=int, default=32,
+                    help="int4 quantization group size along d_in")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="store the paged KV cache int8 (needs --kv-blocks; "
+                         "halves cache bytes per token slot)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -59,10 +68,19 @@ def main() -> None:
         cfg = cfg.reduced()
     model = Model(cfg, dtype=jnp.float32 if args.smoke else jnp.bfloat16)
     params = model.init(jax.random.key(0))
+    if args.quant != "bf16":
+        from repro.quant import param_bytes, quantize_model
+        before = param_bytes(params)
+        params = quantize_model(params, args.quant, args.group_size)
+        print(f"[quant] weights {args.quant}: {before / 1e6:.1f} MB -> "
+              f"{param_bytes(params) / 1e6:.1f} MB")
 
     # --- QEIL plan for this workload (simulated edge platform profile)
+    from repro.quant import quant_workload
     w = Workload(batch=args.requests, prompt_tokens=args.prompt_len,
                  decode_tokens=args.max_new, samples=args.samples)
+    w = quant_workload(w, args.quant,
+                       kv_format="int8" if args.kv_int8 else "bf16")
     router = None
     if args.router:
         from repro.qeil2 import (PGSAMConfig, PGSAMOrchestrator, ParetoRouter,
@@ -121,14 +139,19 @@ def main() -> None:
             (len(prompts), cfg.n_cond_tokens, cfg.d_model), model.dtype)
 
     backend = None
+    if args.kv_int8 and args.kv_blocks is None:
+        raise SystemExit("--kv-int8 requires --kv-blocks (paged cache)")
     if args.kv_blocks is not None:
         from repro.models.cache import paged_supported
         from repro.serving import ExecutionBackend
         if paged_supported(cfg):
+            kv_format = "int8" if args.kv_int8 else "bf16"
             backend = ExecutionBackend(model, params, kv_blocks=args.kv_blocks,
-                                       kv_block_size=args.kv_block_size)
+                                       kv_block_size=args.kv_block_size,
+                                       kv_format=kv_format)
             print(f"[kv] paged cache: {args.kv_blocks} blocks x "
-                  f"{args.kv_block_size} slots")
+                  f"{args.kv_block_size} slots ({kv_format}, "
+                  f"{backend.kv_token_bytes} B/token)")
         else:
             print(f"[kv] arch {cfg.name!r} unsupported for paging; "
                   "dense cache")

@@ -243,16 +243,25 @@ def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
         # (kernel) pools
         new_cache = _fill_cache_paged(cache, k, v, pos1d, block_table)
         ck, cv, cpos = new_cache["k"], new_cache["v"], new_cache["pos"]
-        if use_kernel:
+        quantized = ck.dtype == jnp.int8
+        if use_kernel and not quantized:
             from repro.kernels.decode_attention import ops as da_ops
             out = da_ops.paged_decode_attention(q, ck, cv, cpos, block_table,
                                                 pos1d[:, 0], scale=scale)
         else:
             # gather the sequence's blocks in logical order and slice to the
             # exact cache length: element-for-element the dense decode path
+            # (int8 pools dequantize here; the table-indexed kernel reads
+            # bf16 pools only, so quantized caches take this path)
             kc = ck[block_table].reshape(B, -1, *ck.shape[2:])
             vc = cv[block_table].reshape(B, -1, *cv.shape[2:])
             pc = cpos[block_table].reshape(B, -1)
+            if quantized:
+                ksc = new_cache["k_scale"][block_table].reshape(B, -1, ck.shape[2])
+                vsc = new_cache["v_scale"][block_table].reshape(B, -1, cv.shape[2])
+                kc = kc.astype(jnp.float32) * ksc[..., None]
+                vc = vc.astype(jnp.float32) * vsc[..., None]
+                kc, vc = kc.astype(q.dtype), vc.astype(q.dtype)
             if kv_len is not None:
                 kc, vc, pc = kc[:, :kv_len], vc[:, :kv_len], pc[:, :kv_len]
             ok = (pc[:, None, :] >= 0) & (pc[:, None, :] <= pos1d[:, :, None])
@@ -310,16 +319,37 @@ def _fill_cache_paged(cache: Dict, k, v, pos1d,
     ``block_table`` here is the *prefill* table (one row per unique prompt):
     position p lands in pool block ``table[b, p // bs]`` row ``p % bs``.
     Every row owns distinct blocks, so scatter indices stay unique.
+
+    int8 pools (``cache["k"].dtype == int8``) quantize on fill: each written
+    slot stores ``round(k / scale)`` per kv-head with ``scale = absmax / 127``
+    scattered into ``k_scale`` / ``v_scale`` alongside.
     """
     ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
     bs = ck.shape[1]
     bidx = jnp.arange(pos1d.shape[0])[:, None]
     blk = block_table[bidx, pos1d // bs]
     row = (pos1d % bs).astype(jnp.int32)
+    if ck.dtype == jnp.int8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        return {"k": ck.at[blk, row].set(kq),
+                "v": cv.at[blk, row].set(vq),
+                "pos": cpos.at[blk, row].set(pos1d.astype(jnp.int32)),
+                "k_scale": cache["k_scale"].at[blk, row].set(ks),
+                "v_scale": cache["v_scale"].at[blk, row].set(vs)}
     ck = ck.at[blk, row].set(k.astype(ck.dtype))
     cv = cv.at[blk, row].set(v.astype(cv.dtype))
     cpos = cpos.at[blk, row].set(pos1d.astype(jnp.int32))
     return {"k": ck, "v": cv, "pos": cpos}
+
+
+def _quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 per-(token, kv-head) quantization over the head dim:
+    x (B, S, n_kv, hd) -> (q int8, scale f32 (B, S, n_kv))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
 
 
 # =============================================================================

@@ -67,19 +67,28 @@ def n_scanned_super_blocks(cfg: ArchConfig) -> int:
 
 
 def _attn_entry(cfg: ArchConfig, batch: int, cache_len: int, dtype, spec_only: bool,
-                paged: Optional[PagedLayout] = None):
+                paged: Optional[PagedLayout] = None, kv_dtype=None):
     if paged is not None:
+        el_dtype = dtype if kv_dtype is None else kv_dtype
         shapes = {
             "k": ((paged.n_blocks, paged.block_size, cfg.n_kv_heads, cfg.hd),
-                  dtype),
+                  el_dtype),
             "v": ((paged.n_blocks, paged.block_size, cfg.n_kv_heads, cfg.hd),
-                  dtype),
+                  el_dtype),
             "pos": ((paged.n_blocks, paged.block_size), jnp.int32),
         }
+        if el_dtype == jnp.int8:
+            # int8 KV: per-(block, slot, kv-head) dequant scales
+            shapes["k_scale"] = ((paged.n_blocks, paged.block_size,
+                                  cfg.n_kv_heads), jnp.float32)
+            shapes["v_scale"] = ((paged.n_blocks, paged.block_size,
+                                  cfg.n_kv_heads), jnp.float32)
         if spec_only:
             return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
         return {k: (jnp.full(s, -1, d) if k == "pos" else jnp.zeros(s, d))
                 for k, (s, d) in shapes.items()}
+    if kv_dtype is not None:
+        raise ValueError("kv_dtype (quantized KV) requires the paged layout")
     W = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
     if cfg.mla is not None:
         m = cfg.mla
@@ -118,17 +127,19 @@ def _ssm_entry(cfg: ArchConfig, batch: int, dtype, spec_only: bool):
 
 
 def _entry(cfg: ArchConfig, mixer: str, batch: int, cache_len: int, dtype,
-           spec_only: bool, paged: Optional[PagedLayout] = None):
+           spec_only: bool, paged: Optional[PagedLayout] = None, kv_dtype=None):
     if mixer == "a":
-        return _attn_entry(cfg, batch, cache_len, dtype, spec_only, paged)
+        return _attn_entry(cfg, batch, cache_len, dtype, spec_only, paged,
+                           kv_dtype)
     return _ssm_entry(cfg, batch, dtype, spec_only)
 
 
 def _super_block_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype,
                        spec_only: bool,
-                       paged: Optional[PagedLayout] = None) -> Dict:
+                       paged: Optional[PagedLayout] = None,
+                       kv_dtype=None) -> Dict:
     return {f"l{i}": _entry(cfg, mixer, batch, cache_len, dtype, spec_only,
-                            paged)
+                            paged, kv_dtype)
             for i, mixer in enumerate(cfg.pattern)}
 
 
@@ -141,12 +152,14 @@ def _stack(tree, n: int, spec_only: bool):
 
 def make_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
                spec_only: bool = False,
-               paged: Optional[PagedLayout] = None) -> Dict:
+               paged: Optional[PagedLayout] = None, kv_dtype=None) -> Dict:
     """Full-model cache: {"prefix": [...], "blocks": (n_scanned, ...) stacked}.
 
     With ``paged`` the attention entries become block pools (see module
     docstring); ``batch``/``cache_len`` are then ignored — capacity lives in
-    the block table the caller maintains.
+    the block table the caller maintains. ``kv_dtype=jnp.int8`` stores paged
+    k/v quantized (symmetric per-slot-per-head, scales in ``k_scale`` /
+    ``v_scale``), halving pool bytes per token slot.
     """
     if paged is not None and not paged_supported(cfg):
         raise ValueError(f"paged KV cache unsupported for arch {cfg.name!r} "
@@ -155,11 +168,11 @@ def make_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
     period = len(cfg.pattern)
     prefix = [
         _entry(cfg, cfg.pattern[i % period], batch, cache_len, dtype,
-               spec_only, paged)
+               spec_only, paged, kv_dtype)
         for i in range(n_prefix_layers(cfg))
     ]
     blocks = _stack(_super_block_cache(cfg, batch, cache_len, dtype, spec_only,
-                                       paged),
+                                       paged, kv_dtype),
                     n_scanned_super_blocks(cfg), spec_only)
     return {"prefix": prefix, "blocks": blocks}
 
@@ -171,9 +184,9 @@ def copy_cache_blocks(cache: Dict, src: jnp.ndarray, dst: jnp.ndarray) -> Dict:
     its first divergent token will land in). Only valid on paged caches
     (every entry is a GQA pool)."""
     def cp(entry: Dict, stacked: bool) -> Dict:
+        # copy every pool leaf present — int8 pools carry k_scale/v_scale too
         out = dict(entry)
-        for key in ("k", "v", "pos"):
-            leaf = entry[key]
+        for key, leaf in entry.items():
             out[key] = (leaf.at[:, dst].set(leaf[:, src]) if stacked
                         else leaf.at[dst].set(leaf[src]))
         return out

@@ -32,6 +32,10 @@ def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
 
 
 def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "qw" in p:
+        # weight-only quantized layer (repro.quant): fused dequant-matmul
+        from repro.quant.quantize import qdense
+        return qdense(p, x)
     y = x @ p["w"]
     if "b" in p:
         y = y + p["b"]

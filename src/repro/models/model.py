@@ -113,13 +113,15 @@ class Model:
                                     spec_only=spec_only)
 
     def init_paged_cache(self, n_blocks: int, block_size: int,
-                         spec_only: bool = False):
+                         spec_only: bool = False, kv_dtype=None):
         """Block-pool cache (repro.models.cache paged layout); address it by
         passing ``batch["block_table"]`` (and a static ``kv_len``) to
-        `forward`."""
+        `forward`. ``kv_dtype=jnp.int8`` stores the pools quantized (half the
+        bytes per token slot; scales ride alongside)."""
         return cache_mod.make_cache(
             self.cfg, 0, 0, self.dtype, spec_only=spec_only,
-            paged=cache_mod.PagedLayout(n_blocks, block_size))
+            paged=cache_mod.PagedLayout(n_blocks, block_size),
+            kv_dtype=kv_dtype)
 
     # ------------------------------------------------------------------ forward
     def forward(self, params: Dict, batch: Dict,

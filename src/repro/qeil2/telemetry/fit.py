@@ -47,6 +47,20 @@ COEF_NAMES = ("ridge_scale", "cpq_kappa", "cpq_exp",
 COEF_DEFAULTS = (1.0, CPQ_KAPPA, CPQ_EXP, PHI_RHO_REF, PHI_T_SLOPE)
 COEF_BOUNDS = ((0.2, 5.0), (0.0, 2.0), (1.0, 4.0), (0.0, 0.5), (5.0, 60.0))
 ETA_BOUNDS = (1e-3, 1.0)
+# full-precision formats keep the bare kernel name as the eta key so existing
+# profiles/gates are unchanged; quantized records fit per-format keys
+_FULL_PRECISION = ("bf16", "fp16", "fp32")
+
+
+def _eta_key(record: dict) -> str:
+    """Duty-factor grouping key for a kernel record: ``"<kernel>:<quant>"``
+    when the record carries a quantized format (repro.quant serving paths
+    have format-dependent byte mixes), else the bare kernel name."""
+    kernel = str(record["kernel"])
+    quant = record.get("quant")
+    if quant and str(quant).lower() not in _FULL_PRECISION:
+        return f"{kernel}:{quant}"
+    return kernel
 
 
 @dataclass(frozen=True)
@@ -81,12 +95,19 @@ class CalibrationProfile:
         return (self.ridge_scale, self.cpq_kappa, self.cpq_exp,
                 self.phi_rho_ref, self.phi_t_slope)
 
-    def eta_for(self, kernel: Optional[str]) -> float:
-        """Measured duty factor for a kernel (1.0 when unmeasured/None)."""
+    def eta_for(self, kernel: Optional[str],
+                quant: Optional[str] = None) -> float:
+        """Measured duty factor for a kernel (1.0 when unmeasured/None).
+
+        With ``quant`` the per-format key ``"<kernel>:<quant>"`` is tried
+        first (quantized kernels fit distinct etas — see `_eta_key`), falling
+        back to the bare kernel name, then 1.0."""
         if kernel is not None:
-            for name, eta in self.kernel_eta:
-                if name == kernel:
-                    return eta
+            keys = ([f"{kernel}:{quant}", kernel] if quant else [kernel])
+            for want in keys:
+                for name, eta in self.kernel_eta:
+                    if name == want:
+                        return eta
         return 1.0
 
     def ci_for(self, name: str) -> Optional[Tuple[float, float]]:
@@ -295,7 +316,7 @@ class CalibrationFitter:
             if measured <= 0:
                 continue
             eta = float(r["roofline_us"]) / measured
-            by_kernel.setdefault(str(r["kernel"]), []).append(
+            by_kernel.setdefault(_eta_key(r), []).append(
                 float(np.clip(eta, *ETA_BOUNDS)))
         rng = np.random.default_rng(self.seed + 1)
         out = {}

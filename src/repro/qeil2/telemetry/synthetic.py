@@ -36,6 +36,11 @@ TRUE_KERNEL_ETA = {
     "flash_attention": 0.82,  # measured time 1/0.82 of roofline
     "decode_attention": 0.64,
     "ssd_scan": 0.71,
+    # quantized-format duty factors fit as distinct keys ("<kernel>:<quant>",
+    # see fit._fit_kernel_eta): the fused dequant path trades MXU work for
+    # packed-byte HBM traffic, so its eta differs per format
+    "dequant_matmul:int8": 0.77,
+    "dequant_matmul:int4": 0.69,
 }
 
 
@@ -70,7 +75,7 @@ def synthetic_trace_store(seed: int = 0, n_energy: int = 240,
         temp_c = float(rng.uniform(25.0, 95.0))
         t_s = float(np.exp(rng.uniform(np.log(1e-4), np.log(1e-1))))
         p0 = (dev.power_peak - dev.power_idle) * dev.util * dev.lambda_eff
-        quant = "bf16" if i % 3 else "fp8"
+        quant = ("fp8", "bf16", "int8", "bf16", "int4")[i % 5]
         fq = quant_factor(quant)
         cols = {
             "intensity": np.array([intensity]),
@@ -88,20 +93,26 @@ def synthetic_trace_store(seed: int = 0, n_energy: int = 240,
             "quant_f": fq, "energy_j": energy_j, "quant": quant,
         })
 
-    for kernel, eta in sorted(TRUE_KERNEL_ETA.items()):
+    for name, eta in sorted(TRUE_KERNEL_ETA.items()):
+        # "<kernel>:<quant>" names emit a quant-stamped record; the fitter
+        # re-derives the same suffixed key from (kernel, quant)
+        kernel, _, quant = name.partition(":")
         # nominal per-call shape costs (arbitrary but fixed — eta is a ratio)
         flops = {"flash_attention": 2.1e9, "decode_attention": 1.3e8,
-                 "ssd_scan": 5.4e8}[kernel]
+                 "ssd_scan": 5.4e8, "dequant_matmul": 8.6e8}[kernel]
         bytes_moved = {"flash_attention": 6.3e6, "decode_attention": 8.4e6,
-                       "ssd_scan": 1.2e7}[kernel]
+                       "ssd_scan": 1.2e7, "dequant_matmul": 4.1e6}[kernel]
         roofline_us = 120.0
         for rep in range(n_kernel_reps):
             measured = roofline_us / eta * float(
                 np.exp(rng.normal(0.0, noise)))
-            store.ingest({
+            rec = {
                 "kind": "kernel", "kernel": kernel, "rep": rep,
                 "flops": flops, "bytes": bytes_moved,
                 "measured_us": measured, "roofline_us": roofline_us,
                 "device": "synthetic",
-            })
+            }
+            if quant:
+                rec["quant"] = quant
+            store.ingest(rec)
     return store

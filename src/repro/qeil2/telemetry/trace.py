@@ -167,10 +167,20 @@ class TraceStore:
             # allocation pressure (CPQ residuals) alongside batch energy
             "prefill_bytes_saved": float(getattr(record,
                                                  "prefill_bytes_saved", 0.0)),
+            # serving formats (repro.quant): per-format duty factors and the
+            # effective bytes the energy model should price
+            "quant": str(getattr(record, "quant", "bf16")),
+            "kv_format": str(getattr(record, "kv_format", "bf16")),
         }
         kv = getattr(record, "kv_blocks_in_use", None)
         if kv is not None:
             rec["kv_blocks_in_use"] = int(kv)
+        wb = getattr(record, "weight_bytes", None)
+        if wb is not None:
+            rec["weight_bytes"] = int(wb)
+        kvb = getattr(record, "kv_bytes_in_use", None)
+        if kvb is not None:
+            rec["kv_bytes_in_use"] = int(kvb)
         if signals:
             rec["signals"] = signals
         if extra:

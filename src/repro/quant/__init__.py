@@ -1,0 +1,22 @@
+"""Quantized serving subsystem: weight-only int8/int4 + int8 paged KV.
+
+See `repro.quant.quantize` for the weight-side API (`quantize_model`,
+`qdense`, packing helpers), `repro.kernels.dequant_matmul` for the fused
+kernel, and `repro.models.cache` / `repro.models.attention` for the int8
+paged KV format (`kv_format="int8"` on `repro.serving.ExecutionBackend`).
+"""
+from repro.quant.quantize import (BYTES_PER_PARAM, DEFAULT_GROUP_SIZE,
+                                  QUANT_FORMATS, QuantizedParams,
+                                  bytes_per_param_for, dequantize_dense,
+                                  dequantize_model, group_size_for,
+                                  is_quantized_dense, pack_int4, param_bytes,
+                                  params_quant_format, qdense, quant_workload,
+                                  quantize_dense, quantize_int4,
+                                  quantize_int8, quantize_model)
+
+__all__ = ["BYTES_PER_PARAM", "DEFAULT_GROUP_SIZE", "QUANT_FORMATS",
+           "QuantizedParams", "bytes_per_param_for", "dequantize_dense",
+           "dequantize_model", "group_size_for", "is_quantized_dense",
+           "pack_int4", "param_bytes", "params_quant_format", "qdense",
+           "quant_workload", "quantize_dense", "quantize_int4",
+           "quantize_int8", "quantize_model"]

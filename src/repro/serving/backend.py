@@ -305,12 +305,25 @@ class ExecutionBackend:
 
     def __init__(self, model: Model, params, eos_token: Optional[int] = None,
                  max_slots: Optional[int] = None,
-                 kv_blocks: Optional[int] = None, kv_block_size: int = 16):
+                 kv_blocks: Optional[int] = None, kv_block_size: int = 16,
+                 kv_format: str = "bf16"):
         self.model = model
         self.params = params
         self.eos_token = eos_token
         self.max_slots = max_slots
         self.slots_in_use = 0
+        if kv_format not in ("bf16", "int8"):
+            raise ValueError(f"unknown kv_format {kv_format!r} "
+                             "(supported: bf16, int8)")
+        if kv_format == "int8" and kv_blocks is None:
+            raise ValueError("kv_format='int8' requires the paged cache "
+                             "(set kv_blocks)")
+        self.kv_format = kv_format
+        # serving format of the loaded weights (repro.quant) + their actual
+        # resident bytes — stamped on telemetry records
+        from repro.quant.quantize import param_bytes, params_quant_format
+        self.quant_format = params_quant_format(params)
+        self.weight_bytes = param_bytes(params)
         self.allocator: Optional[BlockAllocator] = None
         if kv_blocks is not None:
             if not cache_mod.paged_supported(model.cfg):
@@ -430,8 +443,13 @@ class ExecutionBackend:
     def kv_token_bytes(self) -> int:
         """KV bytes one token position costs across the stack (for mapping
         slot/block budgets to real memory, and the prefill-savings
-        telemetry)."""
-        el = 2 if self.model.dtype == jnp.bfloat16 else 4
+        telemetry). Follows the actual cache element dtype: int8 KV stores
+        one byte per element, so at a fixed byte budget the block budget
+        roughly doubles."""
+        if self.kv_format == "int8":
+            el = 1
+        else:
+            el = 2 if self.model.dtype == jnp.bfloat16 else 4
         return cache_mod.kv_bytes_per_token(self.model.cfg, el)
 
     def note_placement(self, placement) -> None:
@@ -530,8 +548,9 @@ class ExecutionBackend:
                 "blocks_free)")
         layout = build_paged_layout(self.allocator, plen, max_new, repeats)
         try:
-            cache = self.model.init_paged_cache(layout.n_pool_blocks,
-                                                layout.block_size)
+            cache = self.model.init_paged_cache(
+                layout.n_pool_blocks, layout.block_size,
+                kv_dtype=jnp.int8 if self.kv_format == "int8" else None)
             # prefill rows are the unique prompts (extras per-prompt as-is);
             # decode rows are the tiled sequences — both tiled exactly once
             prefill_extras = {k: jnp.asarray(v) for k, v in extras.items()}

@@ -118,6 +118,10 @@ class BatchRecord:
     reroute: bool                      # first batch after a re-anneal
     kv_blocks_in_use: Optional[int] = None   # paged backend occupancy
     prefill_bytes_saved: float = 0.0   # KV bytes prefix sharing avoided
+    quant: str = "bf16"                # weight serving format (repro.quant)
+    kv_format: str = "bf16"            # KV-cache element format
+    weight_bytes: Optional[int] = None       # resident (packed) weight bytes
+    kv_bytes_in_use: Optional[int] = None    # occupied KV bytes at service
 
 
 @dataclass(eq=False)
@@ -325,6 +329,16 @@ class ContinuousBatchingScheduler:
             return req.n_samples
         return rc(len(req.prompt), req.max_new_tokens, req.n_samples)
 
+    def _kv_bytes_in_use(self) -> Optional[int]:
+        """Occupied KV bytes right now, priced at the backend's actual cache
+        element format (int8 KV halves this per block)."""
+        blocks = getattr(self.backend, "blocks_in_use", None)
+        alloc = getattr(self.backend, "allocator", None)
+        ktb = getattr(self.backend, "kv_token_bytes", None)
+        if blocks is None or alloc is None or ktb is None:
+            return None
+        return int(blocks * alloc.block_size * ktb)
+
     def submit(self, prompt: np.ndarray, tier, n_samples: int = 1,
                max_new_tokens: Optional[int] = None,
                temperature: Optional[float] = None, rng=None,
@@ -442,7 +456,11 @@ class ContinuousBatchingScheduler:
             meets_caps=decision.meets_caps, reroute=self._reroute_pending,
             kv_blocks_in_use=getattr(self.backend, "blocks_in_use", None),
             prefill_bytes_saved=float(getattr(handle, "prefill_bytes_saved",
-                                              0.0)))
+                                              0.0)),
+            quant=getattr(self.backend, "quant_format", "bf16"),
+            kv_format=getattr(self.backend, "kv_format", "bf16"),
+            weight_bytes=getattr(self.backend, "weight_bytes", None),
+            kv_bytes_in_use=self._kv_bytes_in_use())
         self._reroute_pending = False
         self._batch_id += 1
         self.records.append(record)
