@@ -1,0 +1,175 @@
+"""Regression diff of two bench JSON artifacts (`--out` files).
+
+CI runs each benchmark with ``--out`` and compares the fresh artifact against
+the committed baseline under ``benchmarks/baselines/``: seeded metrics may
+drift better, not worse. Only deterministic fields are gated — wall-clock
+derived numbers (``wall_s``, the obs overhead measurements) are excluded
+because shared runners make them noisy; the obs overhead has its own CI
+assert with a generous bound.
+
+Spec directions:
+  higher  candidate must be >= baseline * (1 - tolerance)
+  lower   candidate must be <= baseline * (1 + tolerance)
+  exact   candidate must equal baseline (counts, booleans)
+
+Dict-valued leaves (e.g. per-tier p95 maps) are compared key-by-key.
+
+Usage:
+  python benchmarks/compare.py BASELINE.json CANDIDATE.json \
+      [--bench serving_schedule] [--tolerance 0.05]
+
+``run()`` performs a self-check (identity compare passes; an injected 20%
+throughput regression is caught) so the harness can gate the comparator
+itself.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+# gated fields per bench artifact: (dotted path, direction)
+SPECS: Dict[str, List[Tuple[str, str]]] = {
+    "serving_schedule": [
+        ("acceptance_all", "exact"),
+        ("scheduler.completed", "exact"),
+        ("scheduler.batches", "exact"),
+        ("scheduler.caps_met_fraction", "higher"),
+        ("scheduler.throughput_rps", "higher"),
+        ("scheduler.ipw_seq_per_j", "higher"),
+        ("scheduler.p95_latency_s", "lower"),
+        ("per_call.throughput_rps", "higher"),
+        ("throughput_ratio", "higher"),
+        ("ipw_ratio", "higher"),
+        ("obs.parity_ok", "exact"),
+        ("obs.span_lifecycle_ok", "exact"),
+    ],
+}
+
+
+def _get(d: Any, path: str) -> Any:
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            raise KeyError(path)
+        d = d[part]
+    return d
+
+
+def _leaf_checks(path: str, base: Any, cand: Any,
+                 direction: str) -> List[Tuple[str, Any, Any, str]]:
+    """Expand dict-valued leaves into per-key scalar checks."""
+    if isinstance(base, dict):
+        out = []
+        for k in sorted(base):
+            if not isinstance(cand, dict) or k not in cand:
+                out.append((f"{path}.{k}", base[k], None, direction))
+            else:
+                out += _leaf_checks(f"{path}.{k}", base[k], cand[k],
+                                    direction)
+        return out
+    return [(path, base, cand, direction)]
+
+
+def compare(base: Dict, cand: Dict, bench: str,
+            tolerance: float = 0.05) -> List[Dict]:
+    """Returns regression findings (empty when candidate is no worse)."""
+    findings = []
+    for path, direction in SPECS[bench]:
+        try:
+            b = _get(base, path)
+        except KeyError:
+            continue            # baseline predates the field: nothing to gate
+        try:
+            c = _get(cand, path)
+        except KeyError:
+            findings.append({"path": path, "base": b, "cand": None,
+                             "why": "missing in candidate"})
+            continue
+        for p, bv, cv, d in _leaf_checks(path, b, c, direction):
+            if cv is None:
+                findings.append({"path": p, "base": bv, "cand": None,
+                                 "why": "missing in candidate"})
+            elif d == "exact":
+                if cv != bv:
+                    findings.append({"path": p, "base": bv, "cand": cv,
+                                     "why": "changed (exact field)"})
+            elif d == "higher":
+                if cv < bv * (1.0 - tolerance) - 1e-12:
+                    findings.append({"path": p, "base": bv, "cand": cv,
+                                     "why": f"regressed > {tolerance:.0%}"})
+            elif d == "lower":
+                if cv > bv * (1.0 + tolerance) + 1e-12:
+                    findings.append({"path": p, "base": bv, "cand": cv,
+                                     "why": f"regressed > {tolerance:.0%}"})
+            else:
+                raise ValueError(f"unknown direction {d!r} for {p}")
+    return findings
+
+
+def report(findings: List[Dict], bench: str, verbose: bool = True) -> bool:
+    ok = not findings
+    if verbose:
+        if ok:
+            print(f"[compare] {bench}: no regressions")
+        else:
+            print(f"[compare] {bench}: {len(findings)} regression(s)")
+            for f in findings:
+                print(f"  {f['path']}: {f['base']!r} -> {f['cand']!r} "
+                      f"({f['why']})")
+    return ok
+
+
+def run(verbose: bool = True) -> Dict:
+    """Self-check for the bench harness: the comparator must pass an identity
+    compare and catch an injected 20% throughput regression."""
+    base = {
+        "acceptance_all": True,
+        "throughput_ratio": 6.0,
+        "ipw_ratio": 2.5,
+        "scheduler": {"completed": 48, "batches": 13,
+                      "caps_met_fraction": 1.0, "throughput_rps": 1000.0,
+                      "ipw_seq_per_j": 50.0,
+                      "p95_latency_s": {"interactive": 0.001,
+                                        "standard": 0.002}},
+        "per_call": {"throughput_rps": 200.0},
+        "obs": {"parity_ok": True, "span_lifecycle_ok": True},
+    }
+    identity = compare(base, copy.deepcopy(base), "serving_schedule")
+    hurt = copy.deepcopy(base)
+    hurt["scheduler"]["throughput_rps"] *= 0.8
+    hurt["scheduler"]["p95_latency_s"]["standard"] *= 2.0
+    caught = compare(base, hurt, "serving_schedule")
+    caught_paths = sorted(f["path"] for f in caught)
+    ok = (not identity and
+          caught_paths == ["scheduler.p95_latency_s.standard",
+                           "scheduler.throughput_rps"])
+    result = {"identity_clean": not identity,
+              "regressions_caught": caught_paths,
+              "self_check_ok": bool(ok)}
+    if verbose:
+        print(f"[compare] self-check: identity clean={not identity}, "
+              f"injected regressions caught={caught_paths}, ok={ok}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--bench", default="serving_schedule",
+                    choices=sorted(SPECS))
+    ap.add_argument("--tolerance", type=float, default=0.05)
+    args = ap.parse_args()
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    with open(args.candidate) as fh:
+        cand = json.load(fh)
+    findings = compare(base, cand, args.bench, tolerance=args.tolerance)
+    if not report(findings, args.bench):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,13 +26,24 @@ lifted from one call to the whole request stream.
 
 Everything except wall-clock is seeded and reproducible.
 
-Run: PYTHONPATH=src python benchmarks/serving_schedule.py [--out FILE]
+The bench doubles as the observability overhead gate: after the official
+(obs-off) run, the identical stream replays twice more over the same warm
+backend — once instrumented (`backend.set_obs`), once not — and the result's
+``obs`` section reports (a) bit-parity of sampled tokens/logprobs between the
+off and on runs (instrumentation must not perturb the RNG stream), (b) span
+lifecycle completeness (every request reconstructs admit -> queue ->
+schedule -> prefill -> decode -> release), and (c) the relative wall-clock
+overhead of running instrumented, gated at <5% in CI.
+
+Run: PYTHONPATH=src python benchmarks/serving_schedule.py \
+         [--out FILE] [--spans-out FILE] [--metrics-out FILE]
 """
 from __future__ import annotations
 
 import json
 import sys
-from typing import Dict, List
+import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -106,23 +117,20 @@ def _percentiles(lat: Dict[str, List[float]]) -> Dict[str, float]:
     return {t: float(np.percentile(v, 95)) for t, v in sorted(lat.items())}
 
 
-def _run_scheduler(cfg, router, arrivals, verbose: bool) -> Dict:
+def _make_backend(cfg):
     import jax
     import jax.numpy as jnp
     from repro.models import Model
-    from repro.qeil2 import TraceStore
-    from repro.serving import (ContinuousBatchingScheduler, ExecutionBackend,
-                               SchedulerConfig)
+    from repro.serving import ExecutionBackend
 
     model = Model(cfg, dtype=jnp.float32)
     params = model.init(jax.random.key(SEED))
-    backend = ExecutionBackend(model, params)
-    trace = TraceStore()
-    sched = ContinuousBatchingScheduler(
-        backend, router,
-        SchedulerConfig(max_batch_requests=8, max_inflight_batches=2,
-                        max_new_tokens=MAX_NEW, seed=SEED), trace=trace)
+    return ExecutionBackend(model, params)
 
+
+def _drive(sched, arrivals) -> float:
+    """Replay the stream through the scheduler; returns wall seconds spent."""
+    t0 = time.perf_counter()
     i = 0
     while i < len(arrivals) or sched.queue.pending or sched.inflight:
         horizon = max(sched.clock, sched.pipeline_free_t)
@@ -135,6 +143,30 @@ def _run_scheduler(cfg, router, arrivals, verbose: bool) -> Dict:
             sched.advance_to(arrivals[i]["t"])
             continue
         sched.step()
+    return time.perf_counter() - t0
+
+
+def _sampled(sched) -> Dict[int, Tuple]:
+    """Bit-parity fingerprint: per request, sampled tokens + logprobs."""
+    return {rid: ([s.tolist() for s in c.result.samples],
+                  [float(lp) for lp in c.result.logprobs])
+            for rid, c in sched.completed.items()}
+
+
+def _run_scheduler(cfg, router, arrivals, verbose: bool, backend=None,
+                   obs=None) -> Tuple[Dict, "object"]:
+    from repro.qeil2 import TraceStore
+    from repro.serving import ContinuousBatchingScheduler, SchedulerConfig
+
+    if backend is None:
+        backend = _make_backend(cfg)
+    trace = TraceStore()
+    sched = ContinuousBatchingScheduler(
+        backend, router,
+        SchedulerConfig(max_batch_requests=8, max_inflight_batches=2,
+                        max_new_tokens=MAX_NEW, seed=SEED), trace=trace,
+        obs=obs)
+    wall_s = _drive(sched, arrivals)
 
     s = sched.stats()
     out = {
@@ -147,6 +179,7 @@ def _run_scheduler(cfg, router, arrivals, verbose: bool) -> Dict:
         "energy_j": s["energy_j"],
         "ipw_seq_per_j": s["sequences"] / max(s["energy_j"], 1e-12),
         "serve_trace_records": len(trace.records("serve")),
+        "wall_s": wall_s,
     }
     if verbose:
         print(f"  scheduler: {out['batches']} batches "
@@ -154,7 +187,7 @@ def _run_scheduler(cfg, router, arrivals, verbose: bool) -> Dict:
               f"{out['throughput_rps']:.1f} req/s, "
               f"ipw={out['ipw_seq_per_j']:.3f} seq/J, "
               f"caps met {out['caps_met_fraction']:.0%}")
-    return out
+    return out, sched
 
 
 def _run_per_call(router, arrivals, verbose: bool) -> Dict:
@@ -184,6 +217,52 @@ def _run_per_call(router, arrivals, verbose: bool) -> Dict:
     return out
 
 
+def _run_obs_gate(cfg, router, arrivals, backend, reference: Dict[int, Tuple],
+                  verbose: bool) -> Tuple[Dict, "object"]:
+    """Replay the stream twice over the warm shared backend — obs off then
+    obs on (`backend.set_obs` flips instrumentation without cold jit) — and
+    gate parity, lifecycle completeness, and relative overhead."""
+    from repro.obs import lifecycles_complete, make_observability
+
+    wall_off = []
+    wall_on = []
+    obs_sched = None
+    for rep in range(2):                      # interleave off/on, take mins
+        off_out, _ = _run_scheduler(cfg, router, arrivals, False,
+                                    backend=backend)
+        wall_off.append(off_out["wall_s"])
+        obs = make_observability()
+        backend.set_obs(obs)
+        try:
+            on_out, obs_sched = _run_scheduler(cfg, router, arrivals, False,
+                                               backend=backend, obs=obs)
+        finally:
+            from repro.obs import NULL_OBS
+            backend.set_obs(NULL_OBS)
+        wall_on.append(on_out["wall_s"])
+
+    tracer = obs_sched.obs.tracer
+    parity_ok = _sampled(obs_sched) == reference
+    life_ok = lifecycles_complete(tracer.spans,
+                                  expect_requests=len(reference))
+    t_off, t_on = min(wall_off), min(wall_on)
+    overhead = t_on / t_off - 1.0
+    gate = {
+        "parity_ok": bool(parity_ok),
+        "span_lifecycle_ok": bool(life_ok),
+        "n_spans": len(tracer),
+        "wall_off_s": t_off,
+        "wall_on_s": t_on,
+        "overhead_frac": overhead,
+        "overhead_ok": bool(overhead < 0.05),
+    }
+    if verbose:
+        print(f"  obs gate:  parity={parity_ok} lifecycle={life_ok} "
+              f"spans={len(tracer)} overhead={overhead:+.1%} "
+              f"(off {t_off:.2f}s / on {t_on:.2f}s)")
+    return gate, obs_sched
+
+
 def run(verbose: bool = True) -> Dict:
     cfg, _w, router = _build_router()
     arrivals = _arrivals(router)
@@ -193,8 +272,13 @@ def run(verbose: bool = True) -> Dict:
             mix[a["tier"]] = mix.get(a["tier"], 0) + 1
         print(f"stream: {N_REQUESTS} requests, tier mix {mix}, "
               f"offered load {OFFERED_LOAD}x per-call capacity")
-    sched = _run_scheduler(cfg, router, arrivals, verbose)
+    backend = _make_backend(cfg)
+    sched, sched_obj = _run_scheduler(cfg, router, arrivals, verbose,
+                                      backend=backend)
     base = _run_per_call(router, arrivals, verbose)
+    obs_gate, obs_sched = _run_obs_gate(cfg, router, arrivals, backend,
+                                        _sampled(sched_obj), verbose)
+    run._obs_sched = obs_sched        # artifact hook for __main__
 
     tiers = sorted(base["p95_latency_s"])
     p95_ok = {t: sched["p95_latency_s"][t] <= base["p95_latency_s"][t] *
@@ -208,11 +292,15 @@ def run(verbose: bool = True) -> Dict:
         "throughput_ratio": sched["throughput_rps"] / base["throughput_rps"],
         "ipw_ratio": sched["ipw_seq_per_j"] / base["ipw_seq_per_j"],
         "p95_no_worse": p95_ok,
+        "obs": obs_gate,
+        # overhead_ok is wall-clock (noisy on shared runners) so it gates a
+        # separate CI assert, not the seeded acceptance bit
         "acceptance_all": bool(
             sched["throughput_rps"] > base["throughput_rps"] and
             all(p95_ok.values()) and
             sched["ipw_seq_per_j"] >= base["ipw_seq_per_j"] and
-            sched["completed"] == N_REQUESTS),
+            sched["completed"] == N_REQUESTS and
+            obs_gate["parity_ok"] and obs_gate["span_lifecycle_ok"]),
     }
     if verbose:
         for t in tiers:
@@ -226,15 +314,29 @@ def run(verbose: bool = True) -> Dict:
     return result
 
 
+def _flag(name: str) -> Optional[str]:
+    if name not in sys.argv:
+        return None
+    idx = sys.argv.index(name) + 1
+    if idx >= len(sys.argv):
+        sys.exit("usage: serving_schedule.py [--out FILE] "
+                 "[--spans-out FILE] [--metrics-out FILE]")
+    return sys.argv[idx]
+
+
 if __name__ == "__main__":
-    out_path = None
-    if "--out" in sys.argv:
-        idx = sys.argv.index("--out") + 1
-        if idx >= len(sys.argv):
-            sys.exit("usage: serving_schedule.py [--out FILE]")
-        out_path = sys.argv[idx]
+    out_path = _flag("--out")
+    spans_path = _flag("--spans-out")
+    metrics_path = _flag("--metrics-out")
     res = run()
     if out_path:
         with open(out_path, "w") as fh:
             json.dump(res, fh, indent=2)
         print(f"wrote {out_path}", file=sys.stderr)
+    obs_sched = getattr(run, "_obs_sched", None)
+    if spans_path and obs_sched is not None:
+        obs_sched.obs.tracer.save(spans_path)
+        print(f"wrote {spans_path}", file=sys.stderr)
+    if metrics_path and obs_sched is not None:
+        obs_sched.obs.metrics.write(metrics_path)
+        print(f"wrote {metrics_path}", file=sys.stderr)

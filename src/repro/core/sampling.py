@@ -56,17 +56,43 @@ class VerifierCascade:
     def __init__(self, exact_verify: Callable[[np.ndarray], bool],
                  logprob_quantile: float = 0.5,
                  always_check_top: int = 1,
-                 early_stop: bool = False):
+                 early_stop: bool = False, obs=None):
         self.exact_verify = exact_verify
         self.q = logprob_quantile
         self.always_check_top = always_check_top
         self.early_stop = early_stop
         self.stats = CascadeStats()
+        # optional repro.obs bundle: per-exact-check "verify" spans (wall
+        # clock — the exact verifier is real host work) + cascade counters
+        from repro.obs import NULL_OBS
+        self.obs = obs if obs is not None else NULL_OBS
+        self._m = None
+        if self.obs.metrics.enabled:
+            reg = self.obs.metrics
+            self._m = {
+                "candidates": reg.counter(
+                    "cascade_candidates_total",
+                    "Samples entering the verification cascade"),
+                "exact_checked": reg.counter(
+                    "cascade_exact_checked_total",
+                    "Exact-verifier invocations"),
+                "exact_passed": reg.counter(
+                    "cascade_exact_passed_total",
+                    "Exact-verifier passes"),
+                "skipped": reg.counter(
+                    "cascade_skipped_total",
+                    "Exact checks avoided by CSVET early stopping"),
+            }
 
     def verify(self, samples: Sequence[np.ndarray],
-               logprobs: Sequence[float]) -> List[bool]:
+               logprobs: Sequence[float],
+               request_id: Optional[int] = None) -> List[bool]:
+        """``request_id`` (optional) stamps the emitted verify/early_stop
+        spans so verification time attributes to the serving request."""
         n = len(samples)
         self.stats.candidates += n
+        if self._m is not None:
+            self._m["candidates"].inc(n)
         lp = np.asarray(logprobs, float)
         thresh = np.quantile(lp, self.q) if n > 1 else -np.inf
         order = np.argsort(-lp)
@@ -81,13 +107,32 @@ class VerifierCascade:
             if self.early_stop else [i for i in range(n) if i in survivors]
         out = [False] * n
         found_pass = False
+        tracer = self.obs.tracer
         for pos, i in enumerate(check_order):
             if found_pass:
-                self.stats.skipped += len(check_order) - pos
+                skipped = len(check_order) - pos
+                self.stats.skipped += skipped
+                if self._m is not None:
+                    self._m["skipped"].inc(skipped)
+                if tracer.enabled:
+                    import time
+                    tracer.emit("early_stop", time.perf_counter(),
+                                clock="wall", request_id=request_id,
+                                skipped=skipped)
                 break
             self.stats.exact_checked += 1
-            out[i] = bool(self.exact_verify(samples[i]))
+            if tracer.enabled:
+                import time
+                t0 = time.perf_counter()
+                out[i] = bool(self.exact_verify(samples[i]))
+                tracer.emit("verify", t0, time.perf_counter(), clock="wall",
+                            request_id=request_id, sample=i, passed=out[i])
+            else:
+                out[i] = bool(self.exact_verify(samples[i]))
             self.stats.exact_passed += int(out[i])
+            if self._m is not None:
+                self._m["exact_checked"].inc()
+                self._m["exact_passed"].inc(int(out[i]))
             if out[i] and self.early_stop:
                 found_pass = True
         return out

@@ -14,6 +14,7 @@ from repro.kernels.decode_attention.decode_attention import (
     decode_attention_pallas, paged_decode_attention_pallas)
 from repro.kernels.decode_attention.ref import (decode_attention_ref,
                                                 paged_decode_attention_ref)
+from repro.obs.profiling import kernel_scope
 
 
 def _on_tpu() -> bool:
@@ -25,9 +26,11 @@ def decode_attention_cache(q, k_cache, v_cache, pos, q_pos, *,
                            scale: Optional[float] = None,
                            window: Optional[int] = None,
                            block_k: int = 128) -> jnp.ndarray:
-    return decode_attention_pallas(q, k_cache, v_cache, pos, q_pos,
-                                   scale=scale, window=window,
-                                   block_k=block_k, interpret=not _on_tpu())
+    with kernel_scope("decode_attention"):
+        return decode_attention_pallas(q, k_cache, v_cache, pos, q_pos,
+                                       scale=scale, window=window,
+                                       block_k=block_k,
+                                       interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("scale",))
@@ -35,9 +38,10 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table, q_pos, *,
                            scale: Optional[float] = None) -> jnp.ndarray:
     """Paged (block-table) decode attention over fixed-size KV pools — the
     serving hot path when the backend runs a paged cache."""
-    return paged_decode_attention_pallas(q, k_pool, v_pool, pos_pool,
-                                         block_table, q_pos, scale=scale,
-                                         interpret=not _on_tpu())
+    with kernel_scope("paged_decode_attention"):
+        return paged_decode_attention_pallas(q, k_pool, v_pool, pos_pool,
+                                             block_table, q_pos, scale=scale,
+                                             interpret=not _on_tpu())
 
 
 def decode_attention(q, k_cache, v_cache, mask, *, scale=None):

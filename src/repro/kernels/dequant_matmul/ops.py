@@ -21,6 +21,7 @@ from repro.kernels.dequant_matmul.ref import (dequant_matmul_int4_ref,
                                               dequant_matmul_int8_ref,
                                               dequantize_int4,
                                               dequantize_int8, unpack_int4)
+from repro.obs.profiling import kernel_scope
 
 
 def _on_tpu() -> bool:
@@ -32,16 +33,18 @@ def dequant_matmul(x: jnp.ndarray, qw: jnp.ndarray,
                    scale: jnp.ndarray) -> jnp.ndarray:
     """``x (..., K) @ dequantize(qw, scale) -> (..., N)`` in x.dtype."""
     lead = x.shape[:-1]
-    if qw.dtype == jnp.uint8:
+    with kernel_scope("dequant_matmul"):
+        if qw.dtype == jnp.uint8:
+            if _on_tpu():
+                y = dequant_matmul_int4_pallas(x.reshape(-1, x.shape[-1]),
+                                               qw, scale)
+                return y.reshape(*lead, y.shape[-1])
+            return dequant_matmul_int4_ref(x, qw, scale)
         if _on_tpu():
-            y = dequant_matmul_int4_pallas(x.reshape(-1, x.shape[-1]),
+            y = dequant_matmul_int8_pallas(x.reshape(-1, x.shape[-1]),
                                            qw, scale)
             return y.reshape(*lead, y.shape[-1])
-        return dequant_matmul_int4_ref(x, qw, scale)
-    if _on_tpu():
-        y = dequant_matmul_int8_pallas(x.reshape(-1, x.shape[-1]), qw, scale)
-        return y.reshape(*lead, y.shape[-1])
-    return dequant_matmul_int8_ref(x, qw, scale)
+        return dequant_matmul_int8_ref(x, qw, scale)
 
 
 __all__ = ["dequant_matmul", "dequant_matmul_int8_pallas",

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.obs.profiling import kernel_scope
 
 
 def _on_tpu() -> bool:
@@ -25,9 +26,11 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
-    return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  scale=scale, block_q=block_q,
-                                  block_k=block_k, interpret=not _on_tpu())
+    with kernel_scope("flash_attention"):
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      scale=scale, block_q=block_q,
+                                      block_k=block_k,
+                                      interpret=not _on_tpu())
 
 
 __all__ = ["flash_attention", "flash_attention_ref"]

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.ref import ssd_chunk_ref
 from repro.kernels.ssd_scan.ssd_scan import ssd_chunk_pallas
+from repro.obs.profiling import kernel_scope
 
 
 def _on_tpu() -> bool:
@@ -32,8 +33,9 @@ def ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc):
     b_k = to_bh(Bc, N)
     c_k = to_bh(Cc, N)
 
-    y, st = ssd_chunk_pallas(x_k, dt_k, dA_k, cs_k, b_k, c_k,
-                             interpret=not _on_tpu())
+    with kernel_scope("ssd_scan"):
+        y, st = ssd_chunk_pallas(x_k, dt_k, dA_k, cs_k, b_k, c_k,
+                                 interpret=not _on_tpu())
     y = jnp.moveaxis(y.reshape(B, H, nc, Q, P), 1, 3)        # (B,nc,Q,H,P)
     st = st.reshape(B, H, nc, P, N).transpose(0, 2, 1, 3, 4)  # (B,nc,H,P,N)
     return y, st

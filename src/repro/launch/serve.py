@@ -61,7 +61,19 @@ def main() -> None:
     ap.add_argument("--kv-int8", action="store_true",
                     help="store the paged KV cache int8 (needs --kv-blocks; "
                          "halves cache bytes per token slot)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot (JSON + .prom sibling) "
+                         "here; with --router, refreshed periodically while "
+                         "the scheduler drains")
+    ap.add_argument("--metrics-interval", type=float, default=5.0,
+                    help="simulated seconds between periodic metrics writes")
+    ap.add_argument("--spans-out", default=None,
+                    help="write request lifecycle spans (JSONL) here")
     args = ap.parse_args()
+
+    from repro.obs import NULL_OBS, PeriodicReporter, make_observability
+    obs = (make_observability() if args.metrics_out or args.spans_out
+           else NULL_OBS)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -148,7 +160,7 @@ def main() -> None:
             kv_format = "int8" if args.kv_int8 else "bf16"
             backend = ExecutionBackend(model, params, kv_blocks=args.kv_blocks,
                                        kv_block_size=args.kv_block_size,
-                                       kv_format=kv_format)
+                                       kv_format=kv_format, obs=obs)
             print(f"[kv] paged cache: {args.kv_blocks} blocks x "
                   f"{args.kv_block_size} slots ({kv_format}, "
                   f"{backend.kv_token_bytes} B/token)")
@@ -156,14 +168,14 @@ def main() -> None:
             print(f"[kv] arch {cfg.name!r} unsupported for paging; "
                   "dense cache")
     engine = ServingEngine(model, params, max_new_tokens=args.max_new,
-                           backend=backend)
+                           backend=backend, obs=obs)
     t0 = time.perf_counter()
     if router is not None:
         from repro.serving import ContinuousBatchingScheduler, SchedulerConfig
         sched = ContinuousBatchingScheduler(
             engine.backend, router,
             SchedulerConfig(max_batch_requests=args.max_batch,
-                            max_new_tokens=args.max_new))
+                            max_new_tokens=args.max_new), obs=obs)
         tiers = (["interactive", "standard", "economy"] if args.mixed
                  else [args.tier])
         ids = []
@@ -175,7 +187,18 @@ def main() -> None:
                 ids.append(adm.request_id)
             else:
                 print(f"[admission] rejected request {i}: {adm.reason}")
-        done = sched.run_until_idle()
+        if args.metrics_out and obs.metrics.enabled:
+            # drain explicitly so the reporter can snapshot on the
+            # scheduler's simulated clock between steps
+            reporter = PeriodicReporter(obs.metrics, args.metrics_out,
+                                        interval_s=args.metrics_interval)
+            while sched.queue.pending or sched.inflight:
+                if not sched.step():
+                    break
+                reporter.maybe_write(sched.clock)
+            done = sched.completed
+        else:
+            done = sched.run_until_idle()
         for rec in sched.records:
             print(f"[scheduler] batch {rec.batch_id}: "
                   f"{rec.n_requests} req ({rec.tier_mix}) -> point "
@@ -193,6 +216,13 @@ def main() -> None:
           f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.0f} tok/s)")
     for i, r in enumerate(results[:3]):
         print(f"  req {i}: best logprob {max(r.logprobs):.3f}")
+
+    if args.metrics_out and obs.metrics.enabled:
+        obs.metrics.write(args.metrics_out)
+        print(f"[obs] metrics snapshot -> {args.metrics_out} (+ .prom)")
+    if args.spans_out and obs.tracer.enabled:
+        obs.tracer.save(args.spans_out)
+        print(f"[obs] {len(obs.tracer)} spans -> {args.spans_out}")
 
 
 if __name__ == "__main__":

@@ -82,7 +82,7 @@ class ControlLoop:
 
     def __init__(self, orchestrator, safety: SafetyMonitor, cfg: ArchConfig,
                  workload: Workload, loop: LoopConfig = LoopConfig(),
-                 router=None, trace=None, scheduler=None):
+                 router=None, trace=None, scheduler=None, obs=None):
         self.orch = orchestrator
         self.safety = safety
         self.cfg = cfg
@@ -95,6 +95,31 @@ class ControlLoop:
         # snapshots when the plan was v2-costed) — the runtime's side of the
         # measurement loop the calibration fitter closes.
         self.trace = trace
+        # optional repro.obs bundle: live drift/re-anneal counters and
+        # temperature/power gauges for the metrics endpoint (`launch/serve
+        # --metrics-out`); the trace store above stays the replayable record
+        self._m = None
+        if obs is not None and obs.metrics.enabled:
+            reg = obs.metrics
+            self._m = {
+                "drift": reg.counter(
+                    "control_drift_events_total",
+                    "Drift events seen by the control loop, by kind",
+                    labelnames=("kind",)),
+                "reanneal": reg.counter(
+                    "control_reanneals_total",
+                    "Drift-triggered re-anneals executed"),
+                "energy": reg.counter(
+                    "control_energy_j_total",
+                    "Energy integrated over control-loop steps"),
+                "throttle": reg.gauge(
+                    "control_throttle_events",
+                    "Cumulative hardware throttle events (safety monitor)"),
+                "temp": reg.gauge(
+                    "control_device_temp_c",
+                    "Junction temperature per device",
+                    labelnames=("device",)),
+            }
         self.assignment: Optional[Assignment] = None
         self._archive: List[Assignment] = []
         self.t_s = 0.0
@@ -310,6 +335,15 @@ class ControlLoop:
             excluded=sorted(self._excluded))
         if self.trace is not None:
             self.trace.ingest_step(report, signals=self._plan_signals(executed))
+        if self._m is not None:
+            for ev in drift:
+                self._m["drift"].inc(kind=ev.kind)
+            if reannealed:
+                self._m["reanneal"].inc()
+            self._m["energy"].inc(report.energy_j)
+            self._m["throttle"].set(report.throttle_events)
+            for name, t in report.temps.items():
+                self._m["temp"].set(t, device=name)
         return report
 
     def _plan_signals(self, assignment) -> Dict[str, dict]:

@@ -433,10 +433,11 @@ class RoutedServingEngine:
     """
 
     def __init__(self, engine, router: ParetoRouter,
-                 default_tier: Optional[str] = None):
+                 default_tier: Optional[str] = None, obs=None):
         self.engine = engine
         self.router = router
         self.default_tier = default_tier
+        self.obs = obs                 # forwarded to the backing scheduler
         # bounded: decisions reference full plans; cap the history so a
         # long-lived server doesn't grow with request count
         self.decisions: Deque[BatchRoutingDecision] = deque(maxlen=256)
@@ -456,7 +457,8 @@ class RoutedServingEngine:
                 self.engine.backend, self.router,
                 config=SchedulerConfig(max_batch_requests=10 ** 9,
                                        max_inflight_batches=1,
-                                       max_queue_depth=None))
+                                       max_queue_depth=None),
+                obs=self.obs)
         return self._scheduler
 
     def generate(self, prompts, tier: Optional[Union[str, SLATier]] = None,

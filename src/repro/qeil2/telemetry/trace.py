@@ -25,14 +25,20 @@ open calibration items describe:
   point, batch energy/makespan, and per-stage `SignalSet.as_dict()`
   snapshots of the batch-workload costing — serving traces feed the same
   `CalibrationFitter` as control-loop step records.
+* ``span`` — request-lifecycle spans from `repro.obs.Tracer` (admit ->
+  queue -> schedule -> prefill -> decode -> release, explicit sim/wall
+  clock): per-request latency attribution riding the same JSONL files.
 
 Records are plain dicts (JSON-serializable); `ingest` validates the minimal
-per-kind schema so a malformed producer fails at the boundary, not inside the
-fitter.
+per-kind schema — and rejects NaN/inf anywhere in a record's numeric fields
+— so a malformed producer fails at the boundary, not inside the fitter (a
+NaN that reaches JSONL round-trips as invalid JSON for strict parsers and
+poisons every fit it touches).
 """
 from __future__ import annotations
 
 import json
+import math
 import os
 from typing import Dict, Iterable, List, Optional
 
@@ -45,7 +51,25 @@ _SCHEMAS: Dict[str, tuple] = {
     "dryrun": ("arch", "shape", "flops"),
     "serve": ("t_s", "bucket", "tier_mix", "queue_delay_s", "point_index",
               "energy_j", "latency_s"),
+    "span": ("name", "t0_s", "t1_s"),
 }
+
+
+def _check_finite(value, path: str) -> None:
+    """Recursively reject NaN/inf numeric leaves (bool is not numeric here).
+    ``path`` names the offending key for the producer's error message."""
+    if isinstance(value, bool):
+        return
+    if isinstance(value, (int, float)):
+        if not math.isfinite(value):
+            raise ValueError(f"non-finite value {value!r} at {path!r} "
+                             "(trace records must be finite JSON numbers)")
+    elif isinstance(value, dict):
+        for k, v in value.items():
+            _check_finite(v, f"{path}.{k}")
+    elif isinstance(value, (list, tuple)):
+        for i, v in enumerate(value):
+            _check_finite(v, f"{path}[{i}]")
 
 
 def _validate(record: dict) -> dict:
@@ -56,6 +80,8 @@ def _validate(record: dict) -> dict:
     missing = [k for k in _SCHEMAS[kind] if k not in record]
     if missing:
         raise ValueError(f"{kind!r} record missing keys {missing}")
+    for k, v in record.items():
+        _check_finite(v, k)
     return record
 
 
@@ -181,11 +207,22 @@ class TraceStore:
         kvb = getattr(record, "kv_bytes_in_use", None)
         if kvb is not None:
             rec["kv_bytes_in_use"] = int(kvb)
+        # per-member simulated queue delays: p95 queue delay is computable
+        # from serve traces alone (no scheduler state re-derivation)
+        entries = getattr(record, "request_entries", None)
+        if entries:
+            rec["requests"] = [dict(e) for e in entries]
         if signals:
             rec["signals"] = signals
         if extra:
             rec.update(extra)
         return self.ingest(rec)
+
+    def ingest_spans(self, tracer) -> int:
+        """Ingest every span a `repro.obs.Tracer` collected (kind ``"span"``).
+        Unneeded when the tracer was constructed with ``store=self`` — spans
+        then mirror on emit."""
+        return self.ingest_many(tracer.records())
 
     # --------------------------------------------------------------- queries
     def records(self, kind: Optional[str] = None) -> List[dict]:

@@ -58,6 +58,7 @@ dense layout.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import (Any, Deque, Dict, List, Optional, Sequence, Set, Tuple,
@@ -69,6 +70,7 @@ import numpy as np
 
 from repro.models import cache as cache_mod
 from repro.models.model import Model
+from repro.obs import NULL_OBS
 
 
 @dataclass
@@ -306,7 +308,7 @@ class ExecutionBackend:
     def __init__(self, model: Model, params, eos_token: Optional[int] = None,
                  max_slots: Optional[int] = None,
                  kv_blocks: Optional[int] = None, kv_block_size: int = 16,
-                 kv_format: str = "bf16"):
+                 kv_format: str = "bf16", obs=None):
         self.model = model
         self.params = params
         self.eos_token = eos_token
@@ -343,9 +345,51 @@ class ExecutionBackend:
         # a long-lived server must not grow linearly with request count.
         self.last_placement = None
         self.placements: Deque = deque(maxlen=256)
+        self.set_obs(obs)
         self._prefill_jit = jax.jit(self._prefill)
         self._decode_jit = jax.jit(self._decode_step,
                                    static_argnames=("kv_len",))
+
+    def set_obs(self, obs) -> None:
+        """Attach (or detach, ``None``) a `repro.obs.Observability` bundle.
+
+        Separate from the constructor so the overhead bench can flip
+        instrumentation on a backend whose jit caches are already warm —
+        metric handles are resolved here, once, and hot paths guard on
+        ``self._m``/``tracer.enabled``; execution state is untouched, so
+        attaching obs cannot perturb outputs (the bit-parity test pins it).
+        """
+        self.obs = obs if obs is not None else NULL_OBS
+        self._m = None
+        if self.obs.metrics.enabled:
+            reg = self.obs.metrics
+            self._m = {
+                "tokens_in": reg.counter(
+                    "serving_tokens_in_total",
+                    "Prompt tokens prefilled (unique rows in paged mode)"),
+                "tokens_out": reg.counter(
+                    "serving_tokens_out_total",
+                    "Tokens sampled across all sequences"),
+                "kv_blocks": reg.gauge(
+                    "serving_kv_blocks_in_use",
+                    "Paged KV blocks currently allocated"),
+                "kv_high": reg.gauge(
+                    "serving_kv_blocks_high_water",
+                    "Peak paged KV block occupancy"),
+                "slots": reg.gauge(
+                    "serving_slots_in_use",
+                    "Dense KV sequence slots currently resident"),
+            }
+
+    def _note_occupancy(self) -> None:
+        if self._m is None:
+            return
+        if self.allocator is not None:
+            used = self.allocator.blocks_in_use
+            self._m["kv_blocks"].set(used)
+            self._m["kv_high"].set_max(used)
+        else:
+            self._m["slots"].set(self.slots_in_use)
 
     # ------------------------------------------------------------------ jitted
     def _prefill(self, params, tokens, cache, extras, block_table=None,
@@ -496,13 +540,26 @@ class ExecutionBackend:
         base = np.stack(list(prompts))                      # (R, L[,K])
         B = int(sum(repeats))
 
+        tracer = self.obs.tracer
+        t0 = time.perf_counter() if tracer.enabled else 0.0
         if self.allocator is not None:
             h = self._start_batch_paged(prompts, repeats, rep, base, B, plen,
                                         max_new, temperature, rng, extras, mc)
+            prefilled = len(prompts) * plen     # one row per unique prompt
         else:
             h = self._start_batch_dense(prompts, repeats, rep, base, B, plen,
                                         max_new, temperature, rng, extras, mc)
+            prefilled = B * plen
         self._live[id(h)] = h
+        if tracer.enabled:
+            # wall clock: real dispatch time of prefill + first sample,
+            # batch id supplied by the scheduler via tracer.batch_context
+            tracer.emit("prefill", t0, time.perf_counter(), clock="wall",
+                        prefill_tokens=prefilled, n_sequences=B, plen=plen)
+        if self._m is not None:
+            self._m["tokens_in"].inc(prefilled)
+            self._m["tokens_out"].inc(B)        # first token per sequence
+            self._note_occupancy()
         return h
 
     def _start_batch_dense(self, prompts, repeats, rep, base, B, plen,
@@ -592,6 +649,8 @@ class ExecutionBackend:
         steps left (so ``while backend.decode_step(h): pass`` drains it)."""
         if h.done:
             return False
+        tracer = self.obs.tracer
+        t0 = time.perf_counter() if tracer.enabled else 0.0
         mc = self._multi_codebook
         h.rng, sub = jax.random.split(h.rng)
         step_pos = jnp.asarray(h.plen + h.step - 1, jnp.int32)
@@ -603,6 +662,11 @@ class ExecutionBackend:
         h.out_toks.append(np.asarray(h.tok))
         h.out_lps.append(np.asarray(lp if not mc else lp.mean(-1)))
         h.step += 1
+        if tracer.enabled:
+            tracer.emit("decode", t0, time.perf_counter(), clock="wall",
+                        step=h.step, n_sequences=h.n_sequences)
+        if self._m is not None:
+            self._m["tokens_out"].inc(h.n_sequences - len(h.freed_seqs))
         return not h.done
 
     def release(self, h: InFlightBatch) -> None:
@@ -621,6 +685,7 @@ class ExecutionBackend:
         else:
             self.slots_in_use -= h.n_sequences - len(h.freed_seqs)
         h.freed_seqs = set(range(h.n_sequences))
+        self._note_occupancy()
 
     def release_sequences(self, h: InFlightBatch,
                           seq_indices: Sequence[int]) -> int:
@@ -654,6 +719,7 @@ class ExecutionBackend:
             else:
                 self.slots_in_use -= 1
                 freed += 1
+        self._note_occupancy()
         return freed
 
     def finalize(self, h: InFlightBatch) -> List[GenerationResult]:

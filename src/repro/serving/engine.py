@@ -29,7 +29,7 @@ class ServingEngine:
     def __init__(self, model: Model, params, max_new_tokens: int = 32,
                  temperature: float = 0.8, eos_token: Optional[int] = None,
                  placement_provider: Optional[Callable] = None,
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None, obs=None):
         self.model = model
         self.params = params
         self.max_new_tokens = max_new_tokens
@@ -43,8 +43,11 @@ class ServingEngine:
         # instead (the scheduler notes decisions on the backend directly);
         # this per-call hook remains for direct engine use.
         self.placement_provider = placement_provider
+        # obs only shapes the default-constructed backend; an explicit
+        # backend keeps whatever bundle it was built with (one backend, one
+        # bundle — the scheduler and engine paths share both)
         self.backend = backend if backend is not None else \
-            ExecutionBackend(model, params, eos_token=eos_token)
+            ExecutionBackend(model, params, eos_token=eos_token, obs=obs)
 
     # placement history lives on the backend so scheduler-driven and
     # call-driven serving share one record; these views keep the old API.

@@ -53,11 +53,12 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_OBS
 from repro.serving.backend import bucket_key as _default_bucket_key
 
 _MISSING = object()    # getattr sentinel: absent attr vs attr that is None
@@ -85,7 +86,9 @@ class ServeRequest:
 class AdmissionResult:
     admitted: bool
     request_id: Optional[int] = None
-    reason: str = ""
+    reason: str = ""                   # human-readable rejection detail
+    reason_code: str = "ok"            # stable label: ok | unknown_tier |
+    #                                    queue_full | kv_budget (metrics key)
     raised_samples: Optional[int] = None   # coverage floor raised the budget
 
 
@@ -122,6 +125,9 @@ class BatchRecord:
     kv_format: str = "bf16"            # KV-cache element format
     weight_bytes: Optional[int] = None       # resident (packed) weight bytes
     kv_bytes_in_use: Optional[int] = None    # occupied KV bytes at service
+    # per-member accounting on the simulated clock: queue_delay_s above is
+    # the max over members; p95 queue delay needs every member's own wait
+    request_entries: List[Dict[str, Any]] = field(default_factory=list)
 
 
 @dataclass(eq=False)
@@ -143,16 +149,46 @@ class RequestQueue:
     """
 
     def __init__(self, router=None, max_queue_depth: Optional[int] = 256,
-                 bucket_key=None):
+                 bucket_key=None, obs=None):
         self.router = router
         self.max_queue_depth = max_queue_depth
         self.bucket_key = bucket_key or _default_bucket_key
+        self.obs = obs if obs is not None else NULL_OBS
         self._buckets: Dict[Tuple, Deque[ServeRequest]] = {}
         self._depth: Dict[str, int] = {}
         self._seq = 0
         self._next_id = 0
         # bounded: rejections are diagnostics, not an audit log
         self.rejections: Deque[AdmissionResult] = deque(maxlen=256)
+        self._m = None
+        if self.obs.metrics.enabled:
+            reg = self.obs.metrics
+            self._m = {
+                "admissions": reg.counter(
+                    "serving_admission_total",
+                    "Admission outcomes by rejection reason code",
+                    labelnames=("outcome", "reason")),
+                "depth": reg.gauge(
+                    "serving_queue_depth",
+                    "Admitted requests waiting, per tier",
+                    labelnames=("tier",)),
+            }
+
+    def _reject(self, reason: str, code: str,
+                arrival_s: float, tier_name: Optional[str]) -> AdmissionResult:
+        res = AdmissionResult(False, reason=reason, reason_code=code)
+        self.rejections.append(res)
+        if self._m is not None:
+            self._m["admissions"].inc(outcome="rejected", reason=code)
+        if self.obs.tracer.enabled:
+            self.obs.tracer.emit("admit", arrival_s, admitted=False,
+                                 reason=code, tier=tier_name)
+        return res
+
+    def _note_depth(self, tier_name: str) -> None:
+        if self._m is not None:
+            self._m["depth"].set(self._depth.get(tier_name, 0),
+                                 tier=tier_name)
 
     # ----------------------------------------------------------- admission
     def submit(self, prompt: np.ndarray, tier, n_samples: int = 1,
@@ -171,19 +207,16 @@ class RequestQueue:
             try:
                 tier = self.router.resolve_tier(tier)
             except KeyError:
-                res = AdmissionResult(False, reason=f"unknown tier {tier!r}")
-                self.rejections.append(res)
-                return res
+                return self._reject(f"unknown tier {tier!r}", "unknown_tier",
+                                    arrival_s, str(tier))
         elif isinstance(tier, str):
             raise ValueError("string tier names need a router to resolve")
         name = tier.name
         if self.max_queue_depth is not None and \
                 self._depth.get(name, 0) >= self.max_queue_depth:
-            res = AdmissionResult(
-                False, reason=f"tier {name!r} queue full "
-                              f"({self.max_queue_depth})")
-            self.rejections.append(res)
-            return res
+            return self._reject(
+                f"tier {name!r} queue full ({self.max_queue_depth})",
+                "queue_full", arrival_s, name)
         raised = None
         if self.router is not None:
             floor = self.router.required_samples(tier)
@@ -195,12 +228,10 @@ class RequestQueue:
             if c > budget:
                 # a request that can never fit the backend's KV budget is
                 # rejected at the door instead of wedging the batch former
-                res = AdmissionResult(
-                    False, reason=f"admission cost {c} (n_samples="
-                                  f"{n_samples}) exceeds the KV budget "
-                                  f"({budget})")
-                self.rejections.append(res)
-                return res
+                return self._reject(
+                    f"admission cost {c} (n_samples={n_samples}) exceeds "
+                    f"the KV budget ({budget})", "kv_budget", arrival_s,
+                    name)
         req = ServeRequest(self._next_id, prompt, tier, n_samples,
                            max_new_tokens, temperature, rng=rng,
                            extras=extras, arrival_s=arrival_s,
@@ -210,6 +241,15 @@ class RequestQueue:
         self._depth[name] = self._depth.get(name, 0) + 1
         key = self.bucket_key(prompt, max_new_tokens, temperature)
         self._buckets.setdefault(key, deque()).append(req)
+        if self._m is not None:
+            self._m["admissions"].inc(outcome="admitted", reason="ok")
+            self._note_depth(name)
+        if self.obs.tracer.enabled:
+            # the request's root span (a point on the sim clock); queue /
+            # release spans auto-parent under it via request_id
+            self.obs.tracer.emit("admit", arrival_s, request_id=req.id,
+                                 admitted=True, tier=name,
+                                 n_samples=n_samples)
         return AdmissionResult(True, req.id, raised_samples=raised)
 
     # ------------------------------------------------------------- queries
@@ -252,6 +292,7 @@ class RequestQueue:
             out.append(q.popleft())
             used += c
             self._depth[head.tier_name] -= 1
+            self._note_depth(head.tier_name)
         return out
 
     def push_front(self, requests: Sequence[ServeRequest]) -> None:
@@ -262,6 +303,7 @@ class RequestQueue:
                                   req.temperature)
             self._buckets.setdefault(key, deque()).appendleft(req)
             self._depth[req.tier_name] = self._depth.get(req.tier_name, 0) + 1
+            self._note_depth(req.tier_name)
 
 
 @dataclass(eq=False)
@@ -285,16 +327,69 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, backend, router,
                  config: SchedulerConfig = SchedulerConfig(),
-                 queue: Optional[RequestQueue] = None, trace=None):
+                 queue: Optional[RequestQueue] = None, trace=None, obs=None):
         self.backend = backend
         self.router = router
         self.config = config
+        # one obs bundle serves the whole pipeline: the scheduler emits
+        # sim-clock lifecycle spans + batch metrics, its queue the admission
+        # side, and the backend wall-clock prefill/decode spans (spans meet
+        # through tracer.batch_context — see repro.obs.tracer)
+        self.obs = obs if obs is not None else NULL_OBS
         self.queue = queue if queue is not None else \
-            RequestQueue(router, config.max_queue_depth)
+            RequestQueue(router, config.max_queue_depth, obs=self.obs)
         # optional repro.qeil2.telemetry.TraceStore: one "serve" record per
         # formed batch (tier mix, queue delay, operating point, SignalSet
         # snapshots) — serving's side of the calibration measurement loop.
         self.trace = trace
+        self._m = None
+        if self.obs.metrics.enabled:
+            reg = self.obs.metrics
+            self._m = {
+                "occupancy": reg.histogram(
+                    "serving_batch_occupancy",
+                    "Requests per formed batch",
+                    buckets=(1, 2, 4, 8, 16, 32, 64)),
+                "queue_delay": reg.histogram(
+                    "serving_queue_delay_s",
+                    "Per-request simulated wait before batch service",
+                    labelnames=("tier",)),
+                "batch_latency": reg.histogram(
+                    "serving_batch_latency_s",
+                    "Routed batch service makespan (simulated)"),
+                "energy": reg.counter(
+                    "serving_energy_j_total",
+                    "Batch energy attributed per member tier",
+                    labelnames=("tier",)),
+                "sequences": reg.counter(
+                    "serving_sequences_total",
+                    "Sequences entering service per tier",
+                    labelnames=("tier",)),
+                "ipw": reg.gauge(
+                    "serving_ipw_seq_per_j",
+                    "Cumulative inferences-per-watt-second (sequences/J) "
+                    "per tier",
+                    labelnames=("tier",)),
+                "prefill_saved": reg.counter(
+                    "serving_prefill_bytes_saved_total",
+                    "KV bytes prefix sharing did not re-prefill"),
+                "completed": reg.counter(
+                    "serving_requests_completed_total",
+                    "Requests retired per tier", labelnames=("tier",)),
+                "early_stop": reg.counter(
+                    "serving_early_stop_released_total",
+                    "KV budget units (blocks/slots) released by CSVET "
+                    "early stops"),
+                "reanneal": reg.counter(
+                    "serving_reanneal_boundaries_total",
+                    "Drift re-anneal notifications from the control loop"),
+                "inflight": reg.gauge(
+                    "serving_inflight_batches",
+                    "Batches mid-decode right now"),
+            }
+        # per-tier running totals behind the IPW attribution gauge
+        self._tier_energy: Dict[str, float] = {}
+        self._tier_seqs: Dict[str, int] = {}
         self.clock = 0.0               # simulated now
         self.pipeline_free_t = 0.0     # simulated pipeline horizon
         self.inflight: List[_InflightEntry] = []
@@ -367,6 +462,8 @@ class ContinuousBatchingScheduler:
             self.router.set_healthy(healthy)
         self.reroute_boundaries += 1
         self._reroute_pending = True
+        if self._m is not None:
+            self._m["reanneal"].inc()
 
     def advance_to(self, t_s: float) -> None:
         """Move the simulated clock forward (idle time between arrivals)."""
@@ -437,10 +534,15 @@ class ContinuousBatchingScheduler:
         if reqs[0].extras:
             extras = {k: np.stack([r.extras[k] for r in reqs])
                       for k in reqs[0].extras}
-        handle = self.backend.start_batch(
-            [r.prompt for r in reqs], [r.n_samples for r in reqs],
-            reqs[0].max_new_tokens, reqs[0].temperature,
-            self._batch_rng(reqs), extras)
+        tracer = self.obs.tracer
+        tracer.batch_context = self._batch_id
+        try:
+            handle = self.backend.start_batch(
+                [r.prompt for r in reqs], [r.n_samples for r in reqs],
+                reqs[0].max_new_tokens, reqs[0].temperature,
+                self._batch_rng(reqs), extras)
+        finally:
+            tracer.batch_context = None
         self.backend.note_placement(decision.assignment)
 
         tier_mix: Dict[str, int] = {}
@@ -460,14 +562,56 @@ class ContinuousBatchingScheduler:
             quant=getattr(self.backend, "quant_format", "bf16"),
             kv_format=getattr(self.backend, "kv_format", "bf16"),
             weight_bytes=getattr(self.backend, "weight_bytes", None),
-            kv_bytes_in_use=self._kv_bytes_in_use())
+            kv_bytes_in_use=self._kv_bytes_in_use(),
+            request_entries=[{"id": r.id, "tier": r.tier_name,
+                              "n_samples": r.n_samples,
+                              "queue_delay_s": start - r.arrival_s}
+                             for r in reqs])
         self._reroute_pending = False
         self._batch_id += 1
         self.records.append(record)
         if self.trace is not None:
             self.trace.ingest_serve(record,
                                     signals=plan_signals(decision))
+        if tracer.enabled:
+            tracer.emit("schedule", start, batch_id=record.batch_id,
+                        point_index=record.point_index,
+                        energy_j=record.energy_j,
+                        latency_s=record.latency_s,
+                        meets_caps=record.meets_caps,
+                        n_requests=record.n_requests,
+                        tier_mix=dict(tier_mix))
+            for r in reqs:
+                # per-member wait on the sim clock; batch_id joins the
+                # request to its batch-level schedule/prefill/decode spans
+                tracer.emit("queue", r.arrival_s, start, request_id=r.id,
+                            batch_id=record.batch_id, tier=r.tier_name)
+        if self._m is not None:
+            self._observe_batch(record, decision, reqs)
         return _InflightEntry(handle, reqs, decision, record, start, done_t)
+
+    def _observe_batch(self, record: BatchRecord, decision,
+                       reqs: List[ServeRequest]) -> None:
+        m = self._m
+        m["occupancy"].observe(record.n_requests)
+        m["batch_latency"].observe(record.latency_s)
+        m["prefill_saved"].inc(record.prefill_bytes_saved)
+        for r in reqs:
+            m["queue_delay"].observe(record.t_s - r.arrival_s,
+                                     tier=r.tier_name)
+            m["sequences"].inc(r.n_samples, tier=r.tier_name)
+            self._tier_seqs[r.tier_name] = \
+                self._tier_seqs.get(r.tier_name, 0) + r.n_samples
+        # per-tier energy attribution when the router prices it (v2-costed
+        # batch decisions); stub routers without it attribute nothing
+        per_tier = getattr(decision, "per_tier_energy_j", None) or {}
+        for tier, e in per_tier.items():
+            m["energy"].inc(e, tier=tier)
+            self._tier_energy[tier] = self._tier_energy.get(tier, 0.0) + e
+        for tier in {r.tier_name for r in reqs}:
+            e = self._tier_energy.get(tier, 0.0)
+            if e > 0.0:
+                m["ipw"].set(self._tier_seqs.get(tier, 0) / e, tier=tier)
 
     def early_stop(self, request_id: int,
                    sample_indices: Optional[Sequence[int]] = None) -> int:
@@ -493,19 +637,36 @@ class ContinuousBatchingScheduler:
                         raise ValueError(
                             f"sample indices {bad} out of range for request "
                             f"{request_id} with {r.n_samples} samples")
-                    return rel(entry.handle, [off + i for i in idxs])
+                    freed = rel(entry.handle, [off + i for i in idxs])
+                    if self.obs.tracer.enabled:
+                        self.obs.tracer.emit(
+                            "early_stop", self.clock, request_id=request_id,
+                            batch_id=entry.record.batch_id, freed=freed,
+                            n_released=len(list(idxs)))
+                    if self._m is not None and freed:
+                        self._m["early_stop"].inc(freed)
+                    return freed
                 off += r.n_samples
         return 0
 
     def _retire(self, entry: _InflightEntry) -> None:
         results = self.backend.finalize(entry.handle)
         self.clock = max(self.clock, entry.done_t)
+        tracer = self.obs.tracer
         for req, res in zip(entry.requests, results):
             self.completed[req.id] = CompletedRequest(
                 request=req, result=res, batch_id=entry.record.batch_id,
                 queue_delay_s=entry.start_t - req.arrival_s,
                 latency_s=entry.done_t - req.arrival_s,
                 decision=entry.decision)
+            if tracer.enabled:
+                tracer.emit("release", entry.done_t, request_id=req.id,
+                            batch_id=entry.record.batch_id,
+                            tier=req.tier_name,
+                            queue_delay_s=entry.start_t - req.arrival_s,
+                            latency_s=entry.done_t - req.arrival_s)
+            if self._m is not None:
+                self._m["completed"].inc(tier=req.tier_name)
 
     # ---------------------------------------------------------------- step
     def step(self) -> bool:
@@ -519,14 +680,21 @@ class ContinuousBatchingScheduler:
                 break
             self.inflight.append(entry)
             progressed = True
+        tracer = self.obs.tracer
         for entry in list(self.inflight):
             if not entry.handle.done:
-                self.backend.decode_step(entry.handle)
+                tracer.batch_context = entry.record.batch_id
+                try:
+                    self.backend.decode_step(entry.handle)
+                finally:
+                    tracer.batch_context = None
                 progressed = True
             if entry.handle.done:
                 self.inflight.remove(entry)
                 self._retire(entry)
                 progressed = True
+        if self._m is not None:
+            self._m["inflight"].set(len(self.inflight))
         return progressed
 
     def run_until_idle(self, max_steps: int = 10 ** 6
