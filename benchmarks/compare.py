@@ -32,6 +32,20 @@ from typing import Any, Dict, List, Tuple
 
 # gated fields per bench artifact: (dotted path, direction)
 SPECS: Dict[str, List[Tuple[str, str]]] = {
+    "spec_decode": [
+        ("acceptance_all", "exact"),
+        ("tokens_per_forward_ratio", "higher"),
+        ("energy_ratio_draft", "lower"),
+        ("parity.ngram.tokens_equal", "exact"),
+        ("parity.draft.tokens_equal", "exact"),
+        ("variants.off.completed", "exact"),
+        ("variants.ngram.completed", "exact"),
+        ("variants.draft.completed", "exact"),
+        ("variants.draft.tokens_per_forward", "higher"),
+        ("variants.draft.ipw", "higher"),
+        ("variants.draft.refit_depth", "exact"),
+        ("variants.ngram.refit_depth", "exact"),
+    ],
     "serving_schedule": [
         ("acceptance_all", "exact"),
         ("scheduler.completed", "exact"),

@@ -42,6 +42,7 @@ BENCHES = [
      "acceptance_all"),
     ("kv_paging", "benchmarks.kv_paging", "acceptance_all"),
     ("quant_serving", "benchmarks.quant_serving", "acceptance_all"),
+    ("spec_decode", "benchmarks.spec_decode", "acceptance_all"),
     ("bench_compare", "benchmarks.compare", "self_check_ok"),
 ]
 

@@ -30,11 +30,26 @@ class Workload:
     bytes_per_act: float = 2.0
     bytes_per_kv: Optional[float] = None  # KV-cache element bytes (int8 KV=1);
                                           # None -> bytes_per_act
+    # Speculative decode (repro.spec): one verify forward scores
+    # ``spec_queries_per_step`` tokens (1 + draft depth) and commits
+    # ``spec_tokens_per_step`` in expectation — so weights re-stream once per
+    # ``spec_tokens_per_step`` committed tokens while per-query compute and
+    # activation/KV traffic scale with the scored queries. 1.0/1.0 = off.
+    spec_tokens_per_step: float = 1.0
+    spec_queries_per_step: float = 1.0
 
     @property
     def kv_bytes_per_el(self) -> float:
         return self.bytes_per_act if self.bytes_per_kv is None \
             else self.bytes_per_kv
+
+    @property
+    def spec_query_factor(self) -> float:
+        """Scored query tokens per committed decode token (>= 1 when
+        drafting; the compute-side price speculation pays for fewer weight
+        re-streams)."""
+        return self.spec_queries_per_step / max(self.spec_tokens_per_step,
+                                                1e-9)
 
     @property
     def quant_factor(self) -> float:
@@ -162,8 +177,14 @@ def decompose(cfg: ArchConfig, w: Workload) -> List[Stage]:
     bpa, bpp = w.bytes_per_act, w.bytes_per_param
     d, V = cfg.d_model, cfg.vocab_size
     n_pre, n_dec = w.n_prefill_tokens, w.n_decode_tokens
-    n_all = n_pre + n_dec
-    decode_steps = w.decode_tokens  # weight re-streams per decode stage
+    # Speculative verify scores spec_query_factor tokens per committed token
+    # (embed/head/per-layer compute and activation bytes scale with scored
+    # queries), while weights re-stream only once per verify step — the
+    # roofline trade `repro.spec.routing.spec_workload` prices.
+    qf = w.spec_query_factor
+    n_dec_scored = n_dec * qf
+    n_all = n_pre + n_dec_scored
+    decode_steps = w.decode_tokens / max(w.spec_tokens_per_step, 1e-9)
 
     embed_pbytes = V * d * cfg.n_codebooks * bpp
     stages.append(Stage("embed", "embed", -1,
@@ -177,7 +198,7 @@ def decompose(cfg: ArchConfig, w: Workload) -> List[Stage]:
         kind = "attn" if mixer == "a" else "ssm"
         for phase in ("prefill", "decode"):
             decode = phase == "decode"
-            n_tok = n_dec if decode else n_pre
+            n_tok = n_dec_scored if decode else n_pre
             if n_tok == 0:
                 continue
             if mixer == "a":

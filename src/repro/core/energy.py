@@ -119,7 +119,10 @@ def boundary_transfer_bytes(execs: List[StageExecution],
     """Bytes crossing a link: activations (n_tokens x d_model) transfer
     whenever consecutive stages of the same phase sit on different devices.
     Shared by the v1 and v2 cost models so their transfer accounting can
-    never drift apart."""
+    never drift apart. Decode-phase tokens are *scored queries*: under
+    speculative decode every committed token rides a verify forward of
+    ``spec_query_factor`` query tokens across the boundary (1.0 when not
+    drafting — bit-identical to the pre-speculation accounting)."""
     transfer_bytes = 0.0
     by_phase: Dict[str, List[StageExecution]] = {}
     for e in execs:
@@ -129,7 +132,9 @@ def boundary_transfer_bytes(execs: List[StageExecution],
         for a, b in zip(seq, seq[1:]):
             if a.device.name != b.device.name:
                 if workload is not None:
-                    n_tok = (workload.n_decode_tokens if phase == "decode"
+                    n_tok = (workload.n_decode_tokens *
+                             workload.spec_query_factor
+                             if phase == "decode"
                              else workload.n_prefill_tokens)
                     transfer_bytes += (n_tok * workload.bytes_per_act *
                                        max(a.stage.width, 1))

@@ -61,6 +61,18 @@ def main() -> None:
     ap.add_argument("--kv-int8", action="store_true",
                     help="store the paged KV cache int8 (needs --kv-blocks; "
                          "halves cache bytes per token slot)")
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="speculative decode draft policy (repro.spec): "
+                         "prompt-lookup n-grams or a small draft model; "
+                         "with --router the SpecPlanner prices draft depth "
+                         "per batch")
+    ap.add_argument("--spec-n", type=int, default=4,
+                    help="max draft tokens verified per decode step")
+    ap.add_argument("--draft-model", default=None, choices=ASSIGNED_ARCHS,
+                    help="arch whose reduced config serves as the draft "
+                         "model (--spec draft; defaults to --arch reduced; "
+                         "must share the target vocab)")
     ap.add_argument("--metrics-out", default=None,
                     help="write a metrics snapshot (JSON + .prom sibling) "
                          "here; with --router, refreshed periodically while "
@@ -86,6 +98,28 @@ def main() -> None:
         params = quantize_model(params, args.quant, args.group_size)
         print(f"[quant] weights {args.quant}: {before / 1e6:.1f} MB -> "
               f"{param_bytes(params) / 1e6:.1f} MB")
+
+    spec_policy = None
+    if args.spec != "off":
+        from repro.spec import (DEFAULT_ACCEPT_RATE, expected_tokens_per_step,
+                                make_draft_policy, spec_supported)
+        if not spec_supported(cfg):
+            raise SystemExit(f"--spec: arch {cfg.name!r} unsupported "
+                             "(needs uniform full attention, one codebook)")
+        draft_model = draft_params = None
+        if args.spec == "draft":
+            dcfg = get_config(args.draft_model or args.arch).reduced()
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise SystemExit(
+                    f"--draft-model {dcfg.name!r} vocab {dcfg.vocab_size} != "
+                    f"target vocab {cfg.vocab_size}")
+            draft_model = Model(dcfg, dtype=model.dtype)
+            draft_params = draft_model.init(jax.random.key(1))
+        spec_policy = make_draft_policy(args.spec, draft_model=draft_model,
+                                        draft_params=draft_params)
+        print(f"[spec] policy {spec_policy.name} depth {args.spec_n}: "
+              f"~{expected_tokens_per_step(args.spec_n, DEFAULT_ACCEPT_RATE):.2f} "
+              f"tok/step at accept rate {DEFAULT_ACCEPT_RATE}")
 
     # --- QEIL plan for this workload (simulated edge platform profile)
     from repro.quant import quant_workload
@@ -153,6 +187,8 @@ def main() -> None:
     backend = None
     if args.kv_int8 and args.kv_blocks is None:
         raise SystemExit("--kv-int8 requires --kv-blocks (paged cache)")
+    spec_kwargs = ({"spec_policy": spec_policy, "spec_n": args.spec_n}
+                   if spec_policy is not None else {})
     if args.kv_blocks is not None:
         from repro.models.cache import paged_supported
         from repro.serving import ExecutionBackend
@@ -160,22 +196,35 @@ def main() -> None:
             kv_format = "int8" if args.kv_int8 else "bf16"
             backend = ExecutionBackend(model, params, kv_blocks=args.kv_blocks,
                                        kv_block_size=args.kv_block_size,
-                                       kv_format=kv_format, obs=obs)
+                                       kv_format=kv_format, obs=obs,
+                                       **spec_kwargs)
             print(f"[kv] paged cache: {args.kv_blocks} blocks x "
                   f"{args.kv_block_size} slots ({kv_format}, "
                   f"{backend.kv_token_bytes} B/token)")
         else:
             print(f"[kv] arch {cfg.name!r} unsupported for paging; "
                   "dense cache")
+    if backend is None and spec_policy is not None:
+        # drafting rides the dense cache too: an explicit backend carries
+        # the policy where the engine would otherwise build a plain one
+        from repro.serving import ExecutionBackend
+        backend = ExecutionBackend(model, params, obs=obs, **spec_kwargs)
     engine = ServingEngine(model, params, max_new_tokens=args.max_new,
                            backend=backend, obs=obs)
     t0 = time.perf_counter()
     if router is not None:
         from repro.serving import ContinuousBatchingScheduler, SchedulerConfig
+        spec_planner = None
+        if spec_policy is not None:
+            from repro.spec import SpecPlanner
+            depths = tuple(sorted({0, args.spec_n // 2, args.spec_n}))
+            spec_planner = SpecPlanner(args.spec, depths=depths,
+                                       model_name=cfg.name)
         sched = ContinuousBatchingScheduler(
             engine.backend, router,
             SchedulerConfig(max_batch_requests=args.max_batch,
-                            max_new_tokens=args.max_new), obs=obs)
+                            max_new_tokens=args.max_new), obs=obs,
+            spec_planner=spec_planner)
         tiers = (["interactive", "standard", "economy"] if args.mixed
                  else [args.tier])
         ids = []
@@ -200,12 +249,17 @@ def main() -> None:
         else:
             done = sched.run_until_idle()
         for rec in sched.records:
+            spec = ""
+            if rec.spec_n:
+                rate = (f" a={rec.spec_accept_rate:.2f}"
+                        if rec.spec_accept_rate is not None else "")
+                spec = f" spec={rec.spec_policy}:{rec.spec_n}{rate}"
             print(f"[scheduler] batch {rec.batch_id}: "
                   f"{rec.n_requests} req ({rec.tier_mix}) -> point "
                   f"{rec.point_index} E={rec.energy_j * 1e3:.2f} mJ "
                   f"T={rec.latency_s * 1e3:.2f} ms "
                   f"queue={rec.queue_delay_s * 1e3:.2f} ms "
-                  f"caps_met={rec.meets_caps}")
+                  f"caps_met={rec.meets_caps}{spec}")
         results = [done[i].result for i in ids]
     else:
         results = engine.generate(prompts, n_samples=args.samples,

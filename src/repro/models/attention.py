@@ -185,8 +185,9 @@ def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
                 cache: Optional[Dict] = None,
                 use_kernel: bool = False,
                 block_table: Optional[jnp.ndarray] = None,
-                kv_len: Optional[int] = None) -> Tuple[jnp.ndarray,
-                                                       Optional[Dict]]:
+                kv_len: Optional[int] = None,
+                decode: bool = False) -> Tuple[jnp.ndarray,
+                                               Optional[Dict]]:
     """Unified GQA attention.
 
     train/prefill: x (B,S,D), positions (B,S[,3]); cache None (train) or an empty
@@ -198,6 +199,11 @@ def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
       ``table[b, p // bs]`` row ``p % bs``. ``kv_len`` statically bounds the
       logical sequence so the gathered reference path is element-for-element
       identical to the dense cache (bit-exact parity).
+    speculative verify: ``decode=True`` forces the cache-attending decode
+      branches even when S > 1 — the S query tokens (last committed token +
+      drafts) are scattered into the cache and each attends over every cache
+      position ``<=`` its own, which both decode branches already express
+      position-generically. Only the S==1 fast kernels are gated off.
     """
     B, S, _ = x.shape
     hd = cfg.hd
@@ -217,8 +223,10 @@ def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
     # Routing is static: S > 1 means train/prefill (fresh cache), S == 1 means a
     # decode step against the ring cache. Chunked prefill (S > 1 with a non-empty
     # cache) is intentionally unsupported — the engine always prefills whole
-    # prompts (see repro/serving/engine.py).
-    if cache is None or S > 1:
+    # prompts (see repro/serving/engine.py). ``decode=True`` overrides the S > 1
+    # heuristic for speculative verify steps (multiple query tokens against the
+    # populated cache).
+    if cache is None or (S > 1 and not decode):
         # ---- train / prefill over full (possibly windowed) sequence
         if use_kernel:
             from repro.kernels.flash_attention import ops as fa_ops
@@ -244,7 +252,7 @@ def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
         new_cache = _fill_cache_paged(cache, k, v, pos1d, block_table)
         ck, cv, cpos = new_cache["k"], new_cache["v"], new_cache["pos"]
         quantized = ck.dtype == jnp.int8
-        if use_kernel and not quantized:
+        if use_kernel and not quantized and S == 1:
             from repro.kernels.decode_attention import ops as da_ops
             out = da_ops.paged_decode_attention(q, ck, cv, cpos, block_table,
                                                 pos1d[:, 0], scale=scale)
@@ -278,7 +286,7 @@ def gqa_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
     cv = cv.at[bidx, slot].set(v)
     cpos = cpos.at[bidx, slot].set(pos1d.astype(jnp.int32))
 
-    if use_kernel:
+    if use_kernel and S == 1:
         from repro.kernels.decode_attention import ops as da_ops
         out = da_ops.decode_attention_cache(q, ck, cv, cpos, pos1d[:, 0],
                                             scale=scale,

@@ -91,7 +91,8 @@ def sublayer_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
                      cache: Optional[Dict], memory: Optional[jnp.ndarray],
                      use_kernel: bool,
                      block_table: Optional[jnp.ndarray] = None,
-                     kv_len: Optional[int] = None
+                     kv_len: Optional[int] = None,
+                     decode: bool = False
                      ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     aux = jnp.zeros((), jnp.float32)
     S = x.shape[1]
@@ -99,7 +100,7 @@ def sublayer_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
     # them out before the self-attention call (which rebuilds its dict).
     cross_kv = None
     if cfg.cross_attention and cfg.cross_kv_cache and cache is not None \
-            and S == 1:
+            and (S == 1 or decode):
         cross_kv = (cache.get("xk"), cache.get("xv"))
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     if mixer == "a":
@@ -111,7 +112,7 @@ def sublayer_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
             y, new_cache = attn.gqa_forward(p["attn"], cfg, h, positions, cache,
                                             use_kernel=use_kernel,
                                             block_table=block_table,
-                                            kv_len=kv_len)
+                                            kv_len=kv_len, decode=decode)
     else:
         y, new_cache = ssm_mod.ssm_forward(p["ssm"], cfg, h, cache,
                                            use_kernel=use_kernel)
@@ -138,7 +139,8 @@ def super_block_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
                         cache: Optional[Dict], memory: Optional[jnp.ndarray],
                         use_kernel: bool,
                         block_table: Optional[jnp.ndarray] = None,
-                        kv_len: Optional[int] = None
+                        kv_len: Optional[int] = None,
+                        decode: bool = False
                         ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """One period of the layer pattern. cache is {"l{i}": sub-cache} or None."""
     aux_total = jnp.zeros((), jnp.float32)
@@ -148,7 +150,8 @@ def super_block_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
         sub_cache = cache.get(key) if cache is not None else None
         x, nc, aux = sublayer_forward(p[key], cfg, x, positions, mixer,
                                       sub_cache, memory, use_kernel,
-                                      block_table=block_table, kv_len=kv_len)
+                                      block_table=block_table, kv_len=kv_len,
+                                      decode=decode)
         if new_cache is not None:
             new_cache[key] = nc
         aux_total = aux_total + aux

@@ -126,14 +126,18 @@ class Model:
     # ------------------------------------------------------------------ forward
     def forward(self, params: Dict, batch: Dict,
                 cache: Optional[Dict] = None,
-                kv_len: Optional[int] = None
+                kv_len: Optional[int] = None,
+                decode: bool = False
                 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
         """Returns (logits, new_cache, aux_loss).
 
         ``batch["block_table"]`` switches attention caching to the paged
         layout (prefill: one row per unique prompt; decode: one row per
         sequence); ``kv_len`` is the static logical cache length the paged
-        reference path slices the gathered pools to.
+        reference path slices the gathered pools to. ``decode=True`` forces
+        the cache-attending decode branches even when S > 1 — the speculative
+        verify step, where S = 1 + n drafted tokens score in one forward
+        (`repro.spec`).
         """
         cfg = self.cfg
         tokens = batch["tokens"]
@@ -159,7 +163,7 @@ class Model:
                                     axis=-1).astype(h.dtype)
 
         vision = batch.get("vision_embeds")
-        if vision is not None and S > 1:
+        if vision is not None and S > 1 and not decode:
             nv = min(vision.shape[1], S)
             h = h.at[:, :nv].set(vision[:, :nv].astype(h.dtype))
 
@@ -174,7 +178,7 @@ class Model:
             h, nc, aux = blk.sublayer_forward(
                 params["prefix"][i], cfg, h, positions, mixer, sub_cache,
                 memory, self.use_kernel, block_table=block_table,
-                kv_len=kv_len)
+                kv_len=kv_len, decode=decode)
             aux_total = aux_total + aux
             if new_prefix is not None:
                 new_prefix.append(nc)
@@ -183,7 +187,8 @@ class Model:
         sb_fwd = functools.partial(blk.super_block_forward, cfg=cfg,
                                    positions=positions, memory=memory,
                                    use_kernel=self.use_kernel,
-                                   block_table=block_table, kv_len=kv_len)
+                                   block_table=block_table, kv_len=kv_len,
+                                   decode=decode)
         if cache is None:
             def one(bp_, x_):
                 x2_, _, a_ = sb_fwd(bp_, x=x_, cache=None)

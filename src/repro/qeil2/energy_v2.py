@@ -24,6 +24,15 @@ Coefficients (all documented at their definition):
 The v1 path stays untouched and remains the default everywhere
 (``plan_costs(..., model="v1")``); v2 is opt-in via the ``model`` flag so the
 seed benchmarks stay reproducible bit-for-bit.
+
+Speculative decode is priced upstream, not here: `repro.spec.spec_workload`
+rescales the decode-phase Workload (weight re-streams amortized across
+``tokens_per_step`` committed tokens, per-query traffic multiplied by the
+query factor) before `repro.core.decompose` builds the stages, so the FLOP/
+byte counts arriving in each Stage already reflect drafting — DASI of decode
+stages rises as verify batching lifts arithmetic intensity, and the shared
+`boundary_transfer_bytes` scales cross-device decode activations by
+``Workload.spec_query_factor``. No equation in this module changes.
 """
 from __future__ import annotations
 

@@ -345,7 +345,8 @@ class ParetoRouter:
     def route_batch(self, tiers: Sequence[Union[str, SLATier]],
                     samples: Optional[int] = None,
                     prompt_tokens: Optional[int] = None,
-                    decode_tokens: Optional[int] = None
+                    decode_tokens: Optional[int] = None,
+                    workload_map=None
                     ) -> BatchRoutingDecision:
         """Route a mixed-tier batch to ONE shared operating point.
 
@@ -357,6 +358,12 @@ class ParetoRouter:
         share — the amortized per-tier cost the telemetry records. Like
         `route`, an infeasible batch degrades to the least-violating point
         flagged ``meets_caps=False`` instead of crashing.
+
+        ``workload_map`` (Workload -> Workload) rewrites the batch workload
+        before re-costing — how speculative-decode pricing enters
+        (`repro.spec.routing.spec_workload` divides decode weight re-streams
+        by expected accepted tokens per verify step while scaling per-query
+        compute); the rewritten workload rides in ``decision.workload``.
         """
         members = [self.resolve_tier(t) for t in tiers]
         if not members:
@@ -368,6 +375,8 @@ class ParetoRouter:
             raise RuntimeError("empty frontier: no placeable operating point")
         w_b = self.batch_workload(len(members), samples,
                                   prompt_tokens, decode_tokens)
+        if workload_map is not None:
+            w_b = workload_map(w_b)
         costed = [self.recost(a, w_b) for a in pts]
         e_min = max(min(c.energy_j for c in costed), 1e-12)
         t_min = max(min(c.makespan_s for c in costed), 1e-12)

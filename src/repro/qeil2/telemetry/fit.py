@@ -78,6 +78,10 @@ class CalibrationProfile:
     phi_t_ref_c: float = PHI_T_REF_C
     # (kernel name, eta) pairs — tuples keep the profile hashable
     kernel_eta: Tuple[Tuple[str, float], ...] = ()
+    # speculative-decode accept rates fitted from "spec" trace records:
+    # ("model|tier|policy", rate) pairs, with "*" wildcard components for
+    # the policy-wide aggregates the fallback chain lands on
+    accept_rates: Tuple[Tuple[str, float], ...] = ()
     ci: Tuple[Tuple[str, Tuple[float, float]], ...] = ()
     source: str = "identity"
     n_traces: int = 0
@@ -89,7 +93,7 @@ class CalibrationProfile:
     @property
     def is_identity(self) -> bool:
         return (self.coefficients() == COEF_DEFAULTS and
-                not self.kernel_eta)
+                not self.kernel_eta and not self.accept_rates)
 
     def coefficients(self) -> Tuple[float, ...]:
         return (self.ridge_scale, self.cpq_kappa, self.cpq_exp,
@@ -110,6 +114,26 @@ class CalibrationProfile:
                         return eta
         return 1.0
 
+    def accept_rate_for(self, model: Optional[str] = None,
+                        tier: Optional[str] = None,
+                        policy: Optional[str] = None,
+                        default: Optional[float] = None) -> Optional[float]:
+        """Fitted speculative accept rate for (model, tier, policy).
+
+        Fallback chain, most to least specific: the exact
+        ``model|tier|policy`` key, then the policy-wide ``*|*|policy``
+        aggregate, then ``default``. A None component matches the wildcard
+        slot directly."""
+        if policy is not None:
+            keys = [f"{model or '*'}|{tier or '*'}|{policy}"]
+            if keys[0] != f"*|*|{policy}":
+                keys.append(f"*|*|{policy}")
+            for want in keys:
+                for key, rate in self.accept_rates:
+                    if key == want:
+                        return rate
+        return default
+
     def ci_for(self, name: str) -> Optional[Tuple[float, float]]:
         for n, interval in self.ci:
             if n == name:
@@ -124,6 +148,7 @@ class CalibrationProfile:
             "phi_rho_ref": self.phi_rho_ref,
             "phi_t_slope": self.phi_t_slope, "phi_t_ref_c": self.phi_t_ref_c,
             "kernel_eta": dict(self.kernel_eta),
+            "accept_rates": dict(self.accept_rates),
             "ci": {k: list(v) for k, v in self.ci},
             "source": self.source, "n_traces": self.n_traces,
         }
@@ -140,6 +165,9 @@ class CalibrationProfile:
             kernel_eta=tuple(sorted(
                 (str(k), float(np.clip(float(v), *ETA_BOUNDS)))
                 for k, v in (d.get("kernel_eta") or {}).items())),
+            accept_rates=tuple(sorted(
+                (str(k), float(np.clip(float(v), 0.0, 1.0)))
+                for k, v in (d.get("accept_rates") or {}).items())),
             ci=tuple(sorted(
                 (str(k), (float(v[0]), float(v[1])))
                 for k, v in (d.get("ci") or {}).items())),
@@ -171,8 +199,10 @@ class ResidualReport:
     n_kernel: int
     n_step: int
     n_dryrun: int
+    n_spec: int = 0
     coefficients: Dict[str, dict] = field(default_factory=dict)
     kernel_eta: Dict[str, dict] = field(default_factory=dict)
+    accept_rates: Dict[str, float] = field(default_factory=dict)
 
     @property
     def improvement_pct(self) -> float:
@@ -187,8 +217,10 @@ class ResidualReport:
             "improvement_pct": self.improvement_pct,
             "n_energy": self.n_energy, "n_kernel": self.n_kernel,
             "n_step": self.n_step, "n_dryrun": self.n_dryrun,
+            "n_spec": self.n_spec,
             "coefficients": self.coefficients,
             "kernel_eta": self.kernel_eta,
+            "accept_rates": self.accept_rates,
         }
 
     def save(self, path: str) -> str:
@@ -333,13 +365,35 @@ class CalibrationFitter:
             out[name] = (point, (float(lo), float(hi)))
         return out
 
+    def _fit_accept_rates(self, records: List[dict]) -> Dict[str, float]:
+        """Pooled speculative accept rates from "spec" records: total
+        accepted / total proposed per (model, tier, policy) key, plus the
+        policy-wide ``*|*|policy`` aggregate the lookup chain falls back to.
+        Pooling weights each batch by its proposal count — exactly the
+        maximum-likelihood estimate for per-token Bernoulli acceptance."""
+        prop: Dict[str, float] = {}
+        acc: Dict[str, float] = {}
+        for r in records:
+            p = float(r["proposed"])
+            if p <= 0:
+                continue
+            a = float(r["accepted"])
+            policy = str(r["policy"])
+            exact = (f"{r.get('model', '*')}|{r.get('tier', '*')}|{policy}")
+            for key in {exact, f"*|*|{policy}"}:
+                prop[key] = prop.get(key, 0.0) + p
+                acc[key] = acc.get(key, 0.0) + a
+        return {k: float(np.clip(acc[k] / prop[k], 0.0, 1.0))
+                for k in sorted(prop)}
+
     # ----------------------------------------------------------------- fit
     def fit(self) -> Tuple[CalibrationProfile, ResidualReport]:
         energy = self.store.records("energy")
         kernel = self.store.records("kernel")
-        if not energy and not kernel:
-            raise ValueError("trace store holds no energy or kernel records "
-                             "to fit against")
+        spec = self.store.records("spec")
+        if not energy and not kernel and not spec:
+            raise ValueError("trace store holds no energy, kernel or spec "
+                             "records to fit against")
 
         theta = np.array(COEF_DEFAULTS, float)
         ci: Dict[str, Tuple[float, float]] = {}
@@ -371,12 +425,14 @@ class CalibrationFitter:
         etas = self._fit_kernel_eta(kernel)
         for name, (_, interval) in etas.items():
             ci[f"eta:{name}"] = interval
+        rates = self._fit_accept_rates(spec)
 
         profile = CalibrationProfile(
             ridge_scale=float(theta[0]), cpq_kappa=float(theta[1]),
             cpq_exp=float(theta[2]), phi_rho_ref=float(theta[3]),
             phi_t_slope=float(theta[4]),
             kernel_eta=tuple(sorted((k, v[0]) for k, v in etas.items())),
+            accept_rates=tuple(sorted(rates.items())),
             ci=tuple(sorted(ci.items())),
             source="fit", n_traces=len(self.store))
 
@@ -387,6 +443,7 @@ class CalibrationFitter:
             n_kernel=counts.get("kernel", 0),
             n_step=counts.get("step", 0),
             n_dryrun=counts.get("dryrun", 0),
+            n_spec=counts.get("spec", 0),
             coefficients={
                 name: {"default": COEF_DEFAULTS[j],
                        "fitted": float(theta[j]),
@@ -394,5 +451,6 @@ class CalibrationFitter:
                                                 float(theta[j]))))}
                 for j, name in enumerate(COEF_NAMES)},
             kernel_eta={name: {"fitted": point, "ci": list(interval)}
-                        for name, (point, interval) in etas.items()})
+                        for name, (point, interval) in etas.items()},
+            accept_rates=dict(rates))
         return profile, report

@@ -28,6 +28,11 @@ open calibration items describe:
 * ``span`` — request-lifecycle spans from `repro.obs.Tracer` (admit ->
   queue -> schedule -> prefill -> decode -> release, explicit sim/wall
   clock): per-request latency attribution riding the same JSONL files.
+* ``spec`` — per-batch speculative-decode outcomes from the scheduler
+  (draft policy, depth, proposed/accepted draft token counts, optionally
+  the serving model and merged tier): the `CalibrationFitter` aggregates
+  these into per-(model, tier, policy) accept rates that
+  `repro.spec.SpecPlanner` prices draft depths with.
 
 Records are plain dicts (JSON-serializable); `ingest` validates the minimal
 per-kind schema — and rejects NaN/inf anywhere in a record's numeric fields
@@ -52,6 +57,7 @@ _SCHEMAS: Dict[str, tuple] = {
     "serve": ("t_s", "bucket", "tier_mix", "queue_delay_s", "point_index",
               "energy_j", "latency_s"),
     "span": ("name", "t0_s", "t1_s"),
+    "spec": ("t_s", "policy", "n", "proposed", "accepted"),
 }
 
 
@@ -198,6 +204,12 @@ class TraceStore:
             "quant": str(getattr(record, "quant", "bf16")),
             "kv_format": str(getattr(record, "kv_format", "bf16")),
         }
+        # speculative decode plan (depth chosen at formation); measured
+        # accept counts ride the separate retire-time "spec" record
+        spec_n = int(getattr(record, "spec_n", 0) or 0)
+        if spec_n:
+            rec["spec_policy"] = str(getattr(record, "spec_policy", "off"))
+            rec["spec_n"] = spec_n
         kv = getattr(record, "kv_blocks_in_use", None)
         if kv is not None:
             rec["kv_blocks_in_use"] = int(kv)

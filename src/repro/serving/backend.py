@@ -55,6 +55,26 @@ it:
 Paged mode is supported for the architectures
 `repro.models.cache.paged_supported` accepts; everything else keeps the
 dense layout.
+
+Speculative decode (``spec_policy=`` in the constructor)
+--------------------------------------------------------
+With a `repro.spec` draft policy attached, ``decode_step`` on a drafting
+batch runs draft -> verify -> commit instead of one-token sampling: the
+policy proposes n tokens from each sequence's own history, ONE verify
+forward scores them against the cache (``decode=True`` forces the
+cache-attending branches at S = n + 1), and `repro.spec.verify_tokens`
+keeps the longest accepted prefix plus a correction/bonus token —
+distribution-preserving under sampling, bit-identical tokens under greedy.
+
+Rollback is free by construction: every verify scatters its S query tokens
+into positions ``[base, base + n]`` *before* attending, positions above a
+query's own are masked, and the next verify re-writes the whole span — so
+rejected-draft KV entries are dead weight that the following step
+overwrites, with zero allocator traffic per step (`release_sequences`
+machinery is only exercised by early stop, exactly as without drafting).
+To make those tail writes safe for rows that finish while the batch is
+still ragged, spec batches allocate a slack horizon of ``spec_n + 1`` extra
+token slots per sequence (`request_blocks` prices it into admission).
 """
 from __future__ import annotations
 
@@ -71,6 +91,9 @@ import numpy as np
 from repro.models import cache as cache_mod
 from repro.models.model import Model
 from repro.obs import NULL_OBS
+from repro.obs.metrics import RATIO_BUCKETS
+from repro.spec.policy import spec_supported
+from repro.spec.verify import verify_tokens
 
 
 @dataclass
@@ -258,6 +281,34 @@ def build_paged_layout(allocator: BlockAllocator, plen: int, max_new: int,
 
 
 @dataclass
+class SpecState:
+    """Speculative decode state of one in-flight batch.
+
+    Sequences progress *raggedly* — each verify step commits between 1 and
+    n+1 tokens per row — so per-sequence token/logprob lists replace the
+    per-step stacked arrays, ``committed`` tracks each row's emitted count,
+    and ``InFlightBatch.step`` is ``committed.min()`` (the batch retires
+    when the slowest row reaches the horizon; finished rows keep riding the
+    static-shape verify forward, writing only into their slack slots).
+    ``proposed``/``accepted`` feed the "spec" telemetry record the
+    `CalibrationFitter` learns accept rates from.
+    """
+    policy: Any                        # DraftPolicy proposing the drafts
+    n: int                             # draft depth for this batch
+    committed: np.ndarray              # (B,) tokens emitted per sequence
+    histories: List[np.ndarray]        # prompt + committed tokens, per seq
+    toks: List[List[int]]              # emitted tokens per sequence
+    lps: List[List[float]]             # emitted logprobs per sequence
+    proposed: int = 0                  # draft tokens offered to verify
+    accepted: int = 0                  # draft tokens verify accepted
+    steps: int = 0                     # verify forwards run
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+
+@dataclass
 class InFlightBatch:
     """One prefilled batch mid-decode: the unit the scheduler interleaves."""
     prompts: List[np.ndarray]
@@ -277,6 +328,7 @@ class InFlightBatch:
     block_table: Optional[jax.Array] = None    # decode table on device
     prefill_bytes_saved: float = 0.0   # KV bytes prefix sharing did not move
     freed_seqs: Set[int] = field(default_factory=set)   # early-released rows
+    spec: Optional[SpecState] = None   # set when this batch drafts (n > 0)
 
     @property
     def n_sequences(self) -> int:
@@ -308,12 +360,27 @@ class ExecutionBackend:
     def __init__(self, model: Model, params, eos_token: Optional[int] = None,
                  max_slots: Optional[int] = None,
                  kv_blocks: Optional[int] = None, kv_block_size: int = 16,
-                 kv_format: str = "bf16", obs=None):
+                 kv_format: str = "bf16", obs=None,
+                 spec_policy=None, spec_n: int = 0):
         self.model = model
         self.params = params
         self.eos_token = eos_token
         self.max_slots = max_slots
         self.slots_in_use = 0
+        # speculative decode: spec_n is the MAXIMUM draft depth — it sizes
+        # the per-sequence slack allocation, so per-batch depths noted via
+        # note_spec may only go down from it
+        self.spec_policy = spec_policy
+        self.spec_n = int(spec_n)
+        self._next_spec_n: Optional[int] = None
+        if spec_policy is not None:
+            if self.spec_n < 1:
+                raise ValueError("spec_policy requires spec_n >= 1 "
+                                 "(the maximum draft depth)")
+            if not spec_supported(model.cfg):
+                raise ValueError(
+                    f"speculative decode unsupported for arch "
+                    f"{model.cfg.name!r} (see repro.spec.spec_supported)")
         if kv_format not in ("bf16", "int8"):
             raise ValueError(f"unknown kv_format {kv_format!r} "
                              "(supported: bf16, int8)")
@@ -348,7 +415,9 @@ class ExecutionBackend:
         self.set_obs(obs)
         self._prefill_jit = jax.jit(self._prefill)
         self._decode_jit = jax.jit(self._decode_step,
-                                   static_argnames=("kv_len",))
+                                   static_argnames=("kv_len", "greedy"))
+        self._spec_verify_jit = jax.jit(self._spec_verify,
+                                        static_argnames=("kv_len", "greedy"))
 
     def set_obs(self, obs) -> None:
         """Attach (or detach, ``None``) a `repro.obs.Observability` bundle.
@@ -379,6 +448,20 @@ class ExecutionBackend:
                 "slots": reg.gauge(
                     "serving_slots_in_use",
                     "Dense KV sequence slots currently resident"),
+                "spec_proposed": reg.counter(
+                    "serving_spec_proposed_total",
+                    "Draft tokens proposed to speculative verify"),
+                "spec_accepted": reg.counter(
+                    "serving_spec_accepted_total",
+                    "Draft tokens accepted by speculative verify"),
+                "spec_accept": reg.histogram(
+                    "serving_spec_accept_rate",
+                    "Per-verify-step draft token accept rate",
+                    buckets=RATIO_BUCKETS),
+                "spec_tps": reg.gauge(
+                    "serving_spec_tokens_per_step",
+                    "Tokens committed per decode step "
+                    "(last speculative verify)"),
             }
 
     def _note_occupancy(self) -> None:
@@ -405,7 +488,7 @@ class ExecutionBackend:
         return logits[:, -1], cache
 
     def _decode_step(self, params, tok, step_pos, cache, rng, temperature,
-                     extras, block_table=None, *, kv_len=None):
+                     extras, block_table=None, *, kv_len=None, greedy=False):
         B = tok.shape[0]
         # positions are built inside the jit from the scalar step counter:
         # nothing per-step is re-tiled or re-staged on the host
@@ -418,10 +501,38 @@ class ExecutionBackend:
         logits, cache, _ = self.model.forward(params, b, cache, kv_len=kv_len)
         logits = logits[:, 0].astype(jnp.float32)          # (B, V) or (B, K, V)
         logp = jax.nn.log_softmax(logits, axis=-1)
-        sample = jax.random.categorical(rng, logits / temperature, axis=-1)
+        if greedy:          # temperature == 0 convention (static branch)
+            sample = jnp.argmax(logits, axis=-1)
+        else:
+            sample = jax.random.categorical(rng, logits / temperature,
+                                            axis=-1)
         chosen_logp = jnp.take_along_axis(logp, sample[..., None],
                                           axis=-1)[..., 0]
         return sample, chosen_logp, cache
+
+    def _spec_verify(self, params, toks, base_pos, cache, rng, temperature,
+                     extras, block_table=None, *, kv_len=None, greedy=False):
+        """One speculative verify forward: score the last committed token +
+        n drafts (S = n + 1 queries per row) against the cache, then
+        accept/reject. ``base_pos`` is each row's position of ``toks[:, 0]``
+        — rows progress raggedly, so it is per-sequence and traced.
+        ``decode=True`` forces the cache-attending branches at S > 1; the
+        scatter of these S positions happens before attention, so every
+        query sees exactly its own prefix (stale rejected-draft entries from
+        the previous step are overwritten or masked by position)."""
+        B, n_q = toks.shape
+        pos = base_pos[:, None] + jnp.arange(n_q, dtype=jnp.int32)[None, :]
+        if self.model.cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (B, n_q, 3))
+        b = {"tokens": toks, "positions": pos, **extras}
+        if block_table is not None:
+            b["block_table"] = block_table
+        logits, cache, _ = self.model.forward(params, b, cache,
+                                              kv_len=kv_len, decode=True)
+        accept_len, out_tokens, out_lps = verify_tokens(
+            logits.astype(jnp.float32), toks[:, 1:], rng, temperature,
+            greedy)
+        return accept_len, out_tokens, out_lps, cache
 
     # ---------------------------------------------------------------- plumbing
     @property
@@ -467,13 +578,27 @@ class ExecutionBackend:
             return self.allocator.n_blocks
         return self.max_slots
 
+    def _spec_slack(self) -> int:
+        """Extra token slots per sequence a speculative backend allocates.
+
+        A verify step writes KV for all its queries before masking decides
+        acceptance — a row that already finished (``committed == max_new``)
+        still rides the static-shape forward with base position
+        ``plen + max_new - 1``, writing up to ``plen + max_new - 1 + n``.
+        Slack of ``spec_n + 1`` slots past the non-speculative last written
+        position (``plen + max_new - 2``) covers the worst case; priced into
+        `request_blocks` so admission stays exact."""
+        return self.spec_n + 1 if self.spec_policy is not None else 0
+
     def request_blocks(self, plen: int, max_new: int, n_samples: int) -> int:
         """Block cost of a request at shared-prefix price: the full prefix
         blocks once, plus per-sample privates (the CoW copy of a partial
         prefix block and the decode blocks). Mirrors `build_paged_layout`
-        exactly — written positions end at ``plen + max_new - 2``."""
+        exactly — written positions end at ``plen + max_new - 2``, plus the
+        speculative slack horizon when a draft policy is attached."""
         bs = self.allocator.block_size
-        n_logical = max(-(-(plen + max_new - 1) // bs), 1)
+        horizon = max_new + self._spec_slack()
+        n_logical = max(-(-(plen + horizon - 1) // bs), 1)
         full_prefix = plen // bs
         return full_prefix + n_samples * (n_logical - full_prefix)
 
@@ -499,6 +624,27 @@ class ExecutionBackend:
     def note_placement(self, placement) -> None:
         self.last_placement = placement
         self.placements.append(placement)
+
+    def note_spec(self, n: int) -> None:
+        """Set the draft depth for the NEXT ``start_batch`` (the router's
+        per-batch choice; 0 runs the batch without drafting). Depths above
+        ``spec_n`` raise — the slack allocation is sized for ``spec_n``."""
+        if self.spec_policy is None:
+            raise RuntimeError("note_spec on a backend with no draft policy")
+        n = int(n)
+        if not 0 <= n <= self.spec_n:
+            raise ValueError(f"spec depth {n} outside [0, {self.spec_n}] "
+                             "(slack allocation is sized for spec_n)")
+        self._next_spec_n = n
+
+    def _consume_spec_n(self) -> int:
+        """Draft depth the next batch runs at: the noted per-batch depth if
+        the router set one, else the configured maximum."""
+        if self.spec_policy is None:
+            return 0
+        n = self._next_spec_n if self._next_spec_n is not None else self.spec_n
+        self._next_spec_n = None
+        return n
 
     @property
     def _multi_codebook(self) -> bool:
@@ -542,6 +688,7 @@ class ExecutionBackend:
 
         tracer = self.obs.tracer
         t0 = time.perf_counter() if tracer.enabled else 0.0
+        n_spec = self._consume_spec_n()
         if self.allocator is not None:
             h = self._start_batch_paged(prompts, repeats, rep, base, B, plen,
                                         max_new, temperature, rng, extras, mc)
@@ -550,6 +697,20 @@ class ExecutionBackend:
             h = self._start_batch_dense(prompts, repeats, rep, base, B, plen,
                                         max_new, temperature, rng, extras, mc)
             prefilled = B * plen
+        if n_spec > 0:
+            first = np.asarray(h.tok).ravel()
+            lp0 = np.asarray(h.out_lps[0]).ravel()
+            hists: List[np.ndarray] = []
+            for prompt, k in zip(prompts, repeats):
+                p = np.asarray(prompt, np.int64).ravel()
+                for _ in range(k):
+                    i = len(hists)
+                    hists.append(np.concatenate([p, first[i:i + 1]]))
+            h.spec = SpecState(
+                policy=self.spec_policy, n=n_spec,
+                committed=np.ones(B, np.int64), histories=hists,
+                toks=[[int(t)] for t in first],
+                lps=[[float(x)] for x in lp0])
         self._live[id(h)] = h
         if tracer.enabled:
             # wall clock: real dispatch time of prefill + first sample,
@@ -574,7 +735,7 @@ class ExecutionBackend:
         tiled_extras = {k: jnp.repeat(jnp.asarray(v), rep, axis=0)
                         for k, v in extras.items()}
 
-        cache = self.model.init_cache(B, plen + max_new)
+        cache = self.model.init_cache(B, plen + max_new + self._spec_slack())
         last_logits, cache = self._prefill_jit(
             self.params, jnp.asarray(tokens), cache, tiled_extras)
 
@@ -582,7 +743,10 @@ class ExecutionBackend:
         rng, sub = jax.random.split(rng)
         lf = last_logits.astype(jnp.float32)
         logp0 = jax.nn.log_softmax(lf, axis=-1)
-        tok = jax.random.categorical(sub, lf / temperature, axis=-1)
+        if temperature > 0:
+            tok = jax.random.categorical(sub, lf / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(lf, axis=-1)
         lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
 
         self.slots_in_use += B
@@ -603,7 +767,8 @@ class ExecutionBackend:
                 f"KV block budget exceeded: need {need} > "
                 f"{self.allocator.blocks_free} free (scheduler must check "
                 "blocks_free)")
-        layout = build_paged_layout(self.allocator, plen, max_new, repeats)
+        layout = build_paged_layout(self.allocator, plen,
+                                    max_new + self._spec_slack(), repeats)
         try:
             cache = self.model.init_paged_cache(
                 layout.n_pool_blocks, layout.block_size,
@@ -632,7 +797,10 @@ class ExecutionBackend:
         rng, sub = jax.random.split(rng)
         lf = jnp.repeat(last_logits.astype(jnp.float32), rep, axis=0)
         logp0 = jax.nn.log_softmax(lf, axis=-1)
-        tok = jax.random.categorical(sub, lf / temperature, axis=-1)
+        if temperature > 0:
+            tok = jax.random.categorical(sub, lf / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(lf, axis=-1)
         lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
 
         return InFlightBatch(
@@ -645,8 +813,11 @@ class ExecutionBackend:
             prefill_bytes_saved=float((B - R) * plen * self.kv_token_bytes))
 
     def decode_step(self, h: InFlightBatch) -> bool:
-        """Advance one token; returns True while the batch still has decode
-        steps left (so ``while backend.decode_step(h): pass`` drains it)."""
+        """Advance one token (or one draft/verify round on a speculative
+        batch); returns True while the batch still has decode steps left
+        (so ``while backend.decode_step(h): pass`` drains it)."""
+        if h.spec is not None:
+            return self._spec_decode_step(h)
         if h.done:
             return False
         tracer = self.obs.tracer
@@ -658,7 +829,8 @@ class ExecutionBackend:
         h.tok, lp, h.cache = self._decode_jit(
             self.params, tok_in, step_pos, h.cache, sub, h.temperature,
             h.extras, h.block_table,
-            kv_len=h.paged.kv_len if h.paged is not None else None)
+            kv_len=h.paged.kv_len if h.paged is not None else None,
+            greedy=h.temperature == 0.0)
         h.out_toks.append(np.asarray(h.tok))
         h.out_lps.append(np.asarray(lp if not mc else lp.mean(-1)))
         h.step += 1
@@ -667,6 +839,85 @@ class ExecutionBackend:
                         step=h.step, n_sequences=h.n_sequences)
         if self._m is not None:
             self._m["tokens_out"].inc(h.n_sequences - len(h.freed_seqs))
+        return not h.done
+
+    def _spec_decode_step(self, h: InFlightBatch) -> bool:
+        """One draft -> verify -> commit round of a speculative batch.
+
+        Rows progress raggedly: each commits ``accept_len + 1`` tokens,
+        clamped to its remaining horizon room; a finished row stays in the
+        static-shape verify (its writes land in the slack slots, see
+        `_spec_slack`) but commits nothing. Early-released rows
+        (``freed_seqs``) keep committing like the non-speculative path keeps
+        sampling them — their tokens just stop counting toward metrics — so
+        a release landing between verify steps touches the allocator exactly
+        once per block, never the in-flight verify state."""
+        if h.done:
+            return False
+        sp = h.spec
+        tracer = self.obs.tracer
+        t_step = time.perf_counter() if tracer.enabled else 0.0
+        B = h.n_sequences
+        n = sp.n
+        drafts = np.asarray(sp.policy.propose(sp.histories, n), np.int32)
+        if drafts.shape != (B, n):
+            raise ValueError(f"draft policy {sp.policy.name!r} returned "
+                             f"shape {drafts.shape}, expected {(B, n)}")
+        t_draft = time.perf_counter() if tracer.enabled else 0.0
+        if tracer.enabled:
+            tracer.emit("draft", t_step, t_draft, clock="wall",
+                        policy=sp.policy.name, n=n, n_sequences=B)
+        h.rng, sub = jax.random.split(h.rng)
+        last = np.asarray([row[-1] for row in sp.toks], np.int32)
+        toks_in = np.concatenate([last[:, None], drafts], axis=1)
+        base_pos = np.asarray(h.plen + sp.committed - 1, np.int32)
+        accept_len, out_tokens, out_lps, h.cache = self._spec_verify_jit(
+            self.params, jnp.asarray(toks_in), jnp.asarray(base_pos),
+            h.cache, sub, h.temperature, h.extras, h.block_table,
+            kv_len=h.paged.kv_len if h.paged is not None else None,
+            greedy=h.temperature == 0.0)
+        accept_len = np.asarray(accept_len)
+        out_tokens = np.asarray(out_tokens)
+        out_lps = np.asarray(out_lps)
+
+        emitted = 0             # metric-visible tokens (non-released rows)
+        committed_this = 0      # tokens committed by rows still decoding
+        accepted_this = 0
+        active = 0
+        for b in range(B):
+            room = h.max_new - int(sp.committed[b])
+            if room <= 0:
+                continue        # finished row: verify output discarded
+            active += 1
+            a = int(accept_len[b])
+            accepted_this += a
+            sp.proposed += n
+            sp.accepted += a
+            e = min(a + 1, room)
+            new = out_tokens[b, :e]
+            sp.toks[b].extend(int(t) for t in new)
+            sp.lps[b].extend(float(x) for x in out_lps[b, :e])
+            sp.histories[b] = np.concatenate(
+                [sp.histories[b], new.astype(np.int64)])
+            sp.committed[b] += e
+            committed_this += e
+            if b not in h.freed_seqs:
+                emitted += e
+        sp.steps += 1
+        h.step = int(sp.committed.min())
+        if tracer.enabled:
+            now = time.perf_counter()
+            tracer.emit("verify", t_draft, now, clock="wall", n=n,
+                        n_sequences=B, accepted=accepted_this)
+            tracer.emit("decode", t_step, now, clock="wall", step=h.step,
+                        n_sequences=B)
+        if self._m is not None:
+            self._m["tokens_out"].inc(emitted)
+            if active and n > 0:
+                self._m["spec_proposed"].inc(active * n)
+                self._m["spec_accepted"].inc(accepted_this)
+                self._m["spec_accept"].observe(accepted_this / (active * n))
+                self._m["spec_tps"].set(committed_this / active)
         return not h.done
 
     def release(self, h: InFlightBatch) -> None:
@@ -726,8 +977,16 @@ class ExecutionBackend:
         """Stack per-step samples into per-request results and release the
         batch's KV budget."""
         mc = self._multi_codebook
-        toks = np.stack(h.out_toks, axis=1)                 # (B, T[,K])
-        lps = np.stack(h.out_lps, axis=1)                   # (B, T)
+        if h.spec is not None:
+            # ragged per-sequence lists -> (B, max_new); the commit clamp
+            # means done implies every row holds exactly max_new tokens
+            toks = np.asarray([row[:h.max_new] for row in h.spec.toks],
+                              np.int32)
+            lps = np.asarray([row[:h.max_new] for row in h.spec.lps],
+                             np.float32)
+        else:
+            toks = np.stack(h.out_toks, axis=1)             # (B, T[,K])
+            lps = np.stack(h.out_lps, axis=1)               # (B, T)
         results = []
         offset = 0
         for prompt, ns in zip(h.prompts, h.repeats):

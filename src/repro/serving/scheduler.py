@@ -125,6 +125,14 @@ class BatchRecord:
     kv_format: str = "bf16"            # KV-cache element format
     weight_bytes: Optional[int] = None       # resident (packed) weight bytes
     kv_bytes_in_use: Optional[int] = None    # occupied KV bytes at service
+    # speculative decode: the routed plan at formation, measured counts
+    # filled in at retirement (the "spec" trace record the accept-rate
+    # fitter reads carries the measured pair)
+    spec_policy: str = "off"           # draft policy name ("off" = none)
+    spec_n: int = 0                    # draft depth this batch ran at
+    spec_accept_rate: Optional[float] = None   # planned -> measured
+    spec_proposed: int = 0             # draft tokens offered to verify
+    spec_accepted: int = 0             # draft tokens verify accepted
     # per-member accounting on the simulated clock: queue_delay_s above is
     # the max over members; p95 queue delay needs every member's own wait
     request_entries: List[Dict[str, Any]] = field(default_factory=list)
@@ -327,10 +335,16 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, backend, router,
                  config: SchedulerConfig = SchedulerConfig(),
-                 queue: Optional[RequestQueue] = None, trace=None, obs=None):
+                 queue: Optional[RequestQueue] = None, trace=None, obs=None,
+                 spec_planner=None):
         self.backend = backend
         self.router = router
         self.config = config
+        # optional repro.spec.SpecPlanner: batch formation then sweeps draft
+        # depths through the router's spec-priced workload and notes the
+        # winning depth on the backend (note_spec) before prefill; a backend
+        # without speculative support simply never receives a note
+        self.spec_planner = spec_planner
         # one obs bundle serves the whole pipeline: the scheduler emits
         # sim-clock lifecycle spans + batch metrics, its queue the admission
         # side, and the backend wall-clock prefill/decode spans (spans meet
@@ -514,18 +528,28 @@ class ContinuousBatchingScheduler:
         # prompt length / decode horizon, not the router's canonical
         # workload — SLA caps must hold for the real batch.
         while True:
-            decision = self.router.route_batch(
-                [r.tier for r in reqs],
+            route_kwargs = dict(
                 samples=math.ceil(sum(r.n_samples for r in reqs)
                                   / len(reqs)),
                 prompt_tokens=len(reqs[0].prompt),
                 decode_tokens=reqs[0].max_new_tokens)
+            if self.spec_planner is not None:
+                decision = self.spec_planner.route_batch(
+                    self.router, [r.tier for r in reqs], **route_kwargs)
+            else:
+                decision = self.router.route_batch(
+                    [r.tier for r in reqs], **route_kwargs)
             if decision.meets_caps or len(reqs) == 1 or \
                     not self.config.respect_caps:
                 break
             keep = max(1, len(reqs) // 2)
             self.queue.push_front(reqs[keep:])
             reqs = reqs[:keep]
+        # the routed draft depth applies to THIS batch only: the backend
+        # consumes the note at its next start_batch
+        spec_plan = getattr(decision, "spec", None)
+        if spec_plan is not None and hasattr(self.backend, "note_spec"):
+            self.backend.note_spec(spec_plan.n)
 
         start = max(self.clock, self.pipeline_free_t)
         done_t = start + decision.latency_s
@@ -548,6 +572,9 @@ class ContinuousBatchingScheduler:
         tier_mix: Dict[str, int] = {}
         for r in reqs:
             tier_mix[r.tier_name] = tier_mix.get(r.tier_name, 0) + 1
+        # the batch's ACTUAL speculation state comes off the handle (the
+        # backend may run at its default depth with no planner attached)
+        hspec = getattr(handle, "spec", None)
         record = BatchRecord(
             batch_id=self._batch_id, t_s=start,
             bucket=len(reqs[0].prompt), n_requests=len(reqs),
@@ -563,6 +590,11 @@ class ContinuousBatchingScheduler:
             kv_format=getattr(self.backend, "kv_format", "bf16"),
             weight_bytes=getattr(self.backend, "weight_bytes", None),
             kv_bytes_in_use=self._kv_bytes_in_use(),
+            spec_policy=hspec.policy.name if hspec is not None else "off",
+            spec_n=hspec.n if hspec is not None else 0,
+            spec_accept_rate=(spec_plan.accept_rate
+                              if spec_plan is not None and spec_plan.enabled
+                              else None),
             request_entries=[{"id": r.id, "tier": r.tier_name,
                               "n_samples": r.n_samples,
                               "queue_delay_s": start - r.arrival_s}
@@ -653,6 +685,27 @@ class ContinuousBatchingScheduler:
         results = self.backend.finalize(entry.handle)
         self.clock = max(self.clock, entry.done_t)
         tracer = self.obs.tracer
+        sp = getattr(entry.handle, "spec", None)
+        if sp is not None:
+            # measured accept counts land on the record, and a "spec" trace
+            # record closes the loop: CalibrationFitter turns these into
+            # per-(model, tier, policy) accept rates for SpecPlanner.refresh
+            entry.record.spec_proposed = int(sp.proposed)
+            entry.record.spec_accepted = int(sp.accepted)
+            entry.record.spec_accept_rate = float(sp.accept_rate)
+            if self.trace is not None and sp.proposed:
+                cfg = getattr(getattr(self.backend, "model", None),
+                              "cfg", None)
+                merged = getattr(entry.decision, "tier", None)
+                rec = {"kind": "spec", "t_s": float(entry.done_t),
+                       "policy": str(sp.policy.name), "n": int(sp.n),
+                       "proposed": int(sp.proposed),
+                       "accepted": int(sp.accepted)}
+                if cfg is not None:
+                    rec["model"] = str(cfg.name)
+                if merged is not None:
+                    rec["tier"] = str(merged.name)
+                self.trace.ingest(rec)
         for req, res in zip(entry.requests, results):
             self.completed[req.id] = CompletedRequest(
                 request=req, result=res, batch_id=entry.record.batch_id,
@@ -729,6 +782,8 @@ class ContinuousBatchingScheduler:
             "latency_p95_s": {t: float(np.percentile(v, 95))
                               for t, v in sorted(per_tier.items())},
             "reroute_boundaries": self.reroute_boundaries,
+            "spec_proposed": sum(r.spec_proposed for r in self.records),
+            "spec_accepted": sum(r.spec_accepted for r in self.records),
         }
 
 

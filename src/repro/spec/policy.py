@@ -1,0 +1,174 @@
+"""Draft policies for speculative decode.
+
+A draft policy proposes ``n`` continuation tokens per sequence from the
+request's committed token history; the backend then scores all of them (plus
+the last committed token) in ONE verify forward and keeps the longest
+accepted prefix (`repro.spec.verify`). Two policies ship behind the
+`DraftPolicy` protocol:
+
+* `NGramDraftPolicy` — model-free self-speculation (prompt lookup): the
+  longest recent suffix of the sequence's own history that re-occurs earlier
+  predicts its historical continuation. Zero extra FLOPs; accept rate is
+  whatever self-similarity the stream actually has.
+* `DraftModelPolicy` — a (smaller) model from the serving zoo rolls out
+  greedily over the committed context. Stateless by construction: every
+  propose left-pads contexts into a fixed width bucket and runs cache-free
+  forwards, so there is no draft-side KV cache to roll back on rejection and
+  jit recompiles are bounded by the bucket count.
+
+Policies are host-side (numpy in / numpy out); only the verify forward runs
+against the target model's paged cache.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+@runtime_checkable
+class DraftPolicy(Protocol):
+    """Proposes draft continuations from per-sequence token histories."""
+    name: str
+
+    def propose(self, histories: Sequence[np.ndarray],
+                n: int) -> np.ndarray:
+        """histories: one 1-D int array per sequence (prompt + committed
+        tokens, oldest first). Returns proposed continuations (B, n) int32.
+        Proposals are *deterministic* given the histories — the verify step's
+        accept/reject treats them as point-mass distributions."""
+        ...
+
+
+def spec_supported(cfg: ArchConfig) -> bool:
+    """Speculative verify covers the same shape of stack as paged caching
+    plus single-codebook heads: every mixer is attention (SSM state updates
+    are inherently one-token-sequential), no MLA, no sliding window (a ring
+    cache of width ``window`` would let a verify step's tail writes evict
+    slots earlier query tokens in the same step still attend to), no
+    cross-attention, one codebook."""
+    return (all(m == "a" for m in cfg.pattern)
+            and cfg.mla is None
+            and cfg.attn_window is None
+            and not cfg.cross_attention
+            and cfg.n_codebooks == 1)
+
+
+class NGramDraftPolicy:
+    """Self-speculative prompt-lookup drafting.
+
+    For each sequence, find the longest suffix (length ``max_ngram`` down to
+    ``min_ngram``) of its history that also occurs earlier, and propose the
+    tokens that followed that earlier occurrence (latest match wins — recent
+    repetition is the better predictor). Falls back to repeating the last
+    token, which the verify step then rejects at the model's discretion:
+    a bad draft costs compute, never correctness.
+    """
+
+    def __init__(self, max_ngram: int = 4, min_ngram: int = 1):
+        if min_ngram < 1 or max_ngram < min_ngram:
+            raise ValueError(f"bad ngram range [{min_ngram}, {max_ngram}]")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self.name = "ngram"
+
+    def propose(self, histories: Sequence[np.ndarray],
+                n: int) -> np.ndarray:
+        out = np.zeros((len(histories), n), np.int32)
+        for b, h in enumerate(histories):
+            out[b] = self._propose_one(np.asarray(h, np.int64).ravel(), n)
+        return out
+
+    def _propose_one(self, h: np.ndarray, n: int) -> np.ndarray:
+        draft = np.zeros((n,), np.int32)
+        L = len(h)
+        if L == 0:
+            return draft
+        draft[:] = h[-1]                      # fallback: repeat last token
+        for k in range(min(self.max_ngram, L - 1), self.min_ngram - 1, -1):
+            sfx = h[L - k:]
+            # latest earlier occurrence whose continuation is non-empty
+            for i in range(L - k - 1, -1, -1):
+                if np.array_equal(h[i:i + k], sfx):
+                    cont = h[i + k:i + k + n]
+                    draft[:len(cont)] = cont
+                    if 0 < len(cont) < n:
+                        draft[len(cont):] = cont[-1]
+                    return draft
+        return draft
+
+
+class DraftModelPolicy:
+    """Greedy rollout of a draft model (usually a reduced config from the
+    same zoo) over the committed context.
+
+    Layout per propose: contexts right-align into a fixed-width bucket with
+    ``n`` rollout columns on the right; pad columns carry negative positions,
+    which `repro.models.attention.causal_mask` masks out, so padding never
+    leaks into real positions. One jitted cache-free forward per rollout
+    column, recompiled only per (bucket width, n) pair.
+    """
+
+    def __init__(self, model, params, bucket: int = 64):
+        import jax
+        self.model = model
+        self.params = params
+        self.bucket = max(int(bucket), 8)
+        self.name = "draft"
+        self._rollout = jax.jit(self._rollout_impl,
+                                static_argnames=("start_col", "n"))
+
+    def _rollout_impl(self, params, toks, positions, *, start_col: int,
+                      n: int):
+        import jax
+        import jax.numpy as jnp
+
+        def body(j, t):
+            logits, _, _ = self.model.forward(params, {"tokens": t,
+                                                       "positions": positions})
+            lg = jnp.take(logits.astype(jnp.float32), start_col - 1 + j,
+                          axis=1)                      # (B, V)
+            nxt = jnp.argmax(lg, axis=-1).astype(t.dtype)
+            return jax.lax.dynamic_update_slice(t, nxt[:, None],
+                                                (0, start_col + j))
+
+        toks = jax.lax.fori_loop(0, n, body, toks)
+        return jax.lax.dynamic_slice(
+            toks, (0, start_col), (toks.shape[0], n))
+
+    def propose(self, histories: Sequence[np.ndarray],
+                n: int) -> np.ndarray:
+        import jax.numpy as jnp
+        B = len(histories)
+        hs = [np.asarray(h, np.int64).ravel() for h in histories]
+        l_max = max((len(h) for h in hs), default=0)
+        width = -(-(l_max + n) // self.bucket) * self.bucket
+        start_col = width - n
+        toks = np.zeros((B, width), np.int32)
+        positions = np.zeros((B, width), np.int32)
+        for b, h in enumerate(hs):
+            L = len(h)
+            toks[b, start_col - L:start_col] = h
+            positions[b] = np.arange(width) - (start_col - L)
+        out = self._rollout(self.params, jnp.asarray(toks),
+                            jnp.asarray(positions), start_col=start_col, n=n)
+        return np.asarray(out, np.int32)
+
+
+def make_draft_policy(kind: str, *, draft_model=None, draft_params=None,
+                      max_ngram: int = 4,
+                      bucket: int = 64) -> Optional[DraftPolicy]:
+    """Policy factory for the launcher / benches: ``off`` -> None,
+    ``ngram`` -> `NGramDraftPolicy`, ``draft`` -> `DraftModelPolicy`
+    (requires the draft model + params)."""
+    if kind == "off":
+        return None
+    if kind == "ngram":
+        return NGramDraftPolicy(max_ngram=max_ngram)
+    if kind == "draft":
+        if draft_model is None or draft_params is None:
+            raise ValueError("draft policy needs draft_model and draft_params")
+        return DraftModelPolicy(draft_model, draft_params, bucket=bucket)
+    raise ValueError(f"unknown draft policy {kind!r}")

@@ -1,0 +1,113 @@
+"""Distribution-preserving accept/reject for speculative verify.
+
+One verify forward scores S = n + 1 query tokens — the last committed token
+plus n drafted ones — yielding ``logits[:, j]`` = the target model's
+next-token distribution *after* draft prefix ``d_1..d_j``. Draft proposals
+are deterministic (point-mass proposals q = delta(d)), so the exact
+rejection-sampling rule collapses to:
+
+  accept d_{j+1}  with probability  p_j(d_{j+1})      (p_j = target at step j)
+  on the first rejection at j = L, emit one corrective token sampled from
+  the residual  p_L(x) * 1[x != d_{L+1}] / (1 - p_L(d_{L+1}))
+  if all n drafts survive, emit one bonus token sampled from p_n.
+
+Marginally every emitted token is distributed exactly as sequential sampling
+from the target: P(emit x at step j) = p_j(d)*1[x=d] + (1-p_j(d)) * p_j(x) *
+1[x!=d] / (1-p_j(d)) = p_j(x). The greedy path (temperature == 0) replaces
+"accept w.p. p(d)" with "accept iff d == argmax p" and the correction/bonus
+with argmax — which commits exactly the token chain sequential greedy decode
+would produce, giving bit-identical tokens by construction.
+
+Reported logprobs are ``log_softmax(logits)`` (untempered), matching
+`ExecutionBackend._decode_step`; acceptance and resampling use the tempered
+distribution ``softmax(logits / temperature)`` — the distribution
+non-speculative decode actually samples from.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def verify_tokens(logits: jnp.ndarray, drafts: jnp.ndarray, rng,
+                  temperature, greedy: bool
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Accept/reject n drafted tokens against target logits.
+
+    logits (B, n+1, V) float32; drafts (B, n) int32; rng a jax PRNG key
+    (unused on the greedy path); ``greedy`` is static.
+
+    Returns (accept_len (B,) int32 in [0, n], out_tokens (B, n+1) int32,
+    out_logps (B, n+1) float32): row b emits ``out_tokens[b, :accept_len[b]
+    + 1]`` — the accepted draft prefix plus one correction/bonus token.
+    Entries past that prefix are garbage and must not be read.
+    """
+    B, n_q, _V = logits.shape
+    n = n_q - 1
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)            # reported logprobs
+    if greedy:
+        top = jnp.argmax(lf, axis=-1)                 # (B, n+1)
+        acc = drafts == top[:, :n] if n else jnp.zeros((B, 0), bool)
+        accepted = jnp.cumprod(acc.astype(jnp.int32), axis=1) \
+            if n else jnp.zeros((B, 0), jnp.int32)
+        accept_len = jnp.sum(accepted, axis=1).astype(jnp.int32)
+        final = jnp.take_along_axis(top, accept_len[:, None],
+                                    axis=1)[:, 0].astype(jnp.int32)
+    else:
+        logp_t = jax.nn.log_softmax(lf / temperature, axis=-1)
+        u_key, cat_key = jax.random.split(rng)
+        if n:
+            p_draft = jnp.exp(jnp.take_along_axis(
+                logp_t[:, :n], drafts[..., None].astype(jnp.int32),
+                axis=-1)[..., 0])                     # (B, n)
+            u = jax.random.uniform(u_key, (B, n))
+            accepted = jnp.cumprod((u < p_draft).astype(jnp.int32), axis=1)
+            accept_len = jnp.sum(accepted, axis=1).astype(jnp.int32)
+        else:
+            accept_len = jnp.zeros((B,), jnp.int32)
+        # correction (L < n: residual — draft token masked out) or bonus
+        # (L == n: plain target sample) from one categorical call
+        scores = jnp.take_along_axis(
+            lf / temperature, accept_len[:, None, None], axis=1)[:, 0]
+        if n:
+            d_next = jnp.take_along_axis(
+                drafts, jnp.minimum(accept_len, n - 1)[:, None],
+                axis=1)[:, 0]                          # draft at L (clamped)
+            mask = (jnp.arange(scores.shape[-1])[None] == d_next[:, None]) \
+                & (accept_len < n)[:, None]
+            scores = jnp.where(mask, NEG_INF, scores)
+        final = jax.random.categorical(cat_key, scores,
+                                       axis=-1).astype(jnp.int32)
+
+    pad = jnp.zeros((B, 1), jnp.int32)
+    chain = jnp.concatenate([drafts.astype(jnp.int32), pad], axis=1) \
+        if n else pad
+    out_tokens = jnp.where(
+        jnp.arange(n + 1)[None] == accept_len[:, None],
+        final[:, None], chain)
+    out_logps = jnp.take_along_axis(logp, out_tokens[..., None],
+                                    axis=-1)[..., 0]
+    return accept_len, out_tokens, out_logps
+
+
+def emission_distribution(probs_next, draft_token: int):
+    """Analytic marginal of the accept/reject rule at one step (numpy):
+    accept the point-mass draft w.p. p(d), else sample the renormalized
+    residual. Equals ``probs_next`` identically — the algebra the
+    distribution-preservation tests pin against the sampled implementation.
+    """
+    import numpy as np
+    p = np.asarray(probs_next, np.float64)
+    out = np.zeros_like(p)
+    pd = p[draft_token]
+    out[draft_token] = pd
+    if pd < 1.0:
+        resid = p.copy()
+        resid[draft_token] = 0.0
+        out += (1.0 - pd) * resid / max(1.0 - pd, 1e-300)
+    return out

@@ -1,0 +1,463 @@
+"""Speculative multi-token decode (PR 8 tentpole).
+
+* `verify_tokens` — the greedy accept rule (argmax-prefix + argmax
+  correction/bonus) on hand-built logits, and distribution preservation of
+  the sampled path: the emitted token's empirical marginal equals the
+  tempered target distribution, deterministically and under hypothesis-
+  driven logits/draft/temperature;
+* greedy speculative decode is *token-identical* to plain decode (logprobs
+  allclose — one verify forward reorders the matmul reductions) for both
+  draft policies, dense and paged caches, on the engine path
+  (`ServingEngine.generate`) and the scheduler path;
+* paged-KV rollback invariants under sampled (random-length) accepts,
+  including `release_sequences` mid-verify: no leak, no double-free,
+  ``blocks_in_use + blocks_free == n_blocks`` after finalize;
+* speculative slack is priced into admission (``request_blocks`` matches
+  the blocks `start_batch` actually takes);
+* `note_spec` per-batch depth notes: validation, one-shot consumption;
+* `CalibrationFitter` recovers planted accept rates from "spec" trace
+  records and `SpecPlanner` turns them into depth choices — full depth at a
+  high fitted rate, drafting off (depth 0) at a low one;
+* `NGramDraftPolicy` prompt-lookup units and the spec_workload algebra.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.models import ArchConfig, Model  # noqa: E402
+from repro.qeil2 import SLATier  # noqa: E402
+from repro.qeil2.telemetry import CalibrationFitter, TraceStore  # noqa: E402
+from repro.qeil2.telemetry.fit import CalibrationProfile  # noqa: E402
+from repro.serving import (ContinuousBatchingScheduler,  # noqa: E402
+                           ExecutionBackend, SchedulerConfig, ServingEngine)
+from repro.spec import (NGramDraftPolicy, SpecPlanner,  # noqa: E402
+                        emission_distribution, expected_tokens_per_step,
+                        make_draft_policy, spec_supported, spec_workload,
+                        verify_tokens)
+
+CFG = ArchConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+PLEN, MAX_NEW, SPEC_N = 8, 6, 3
+# one verify forward vs n single-token forwards: same math, different
+# matmul reduction order (f32 ~1e-6 relative per element)
+LOGPROB_ATOL = 3e-5
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = Model(CFG, dtype=jnp.float32)
+    return model, model.init(jax.random.key(0))
+
+
+def _prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, size=(PLEN,)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _backend(model, params, policy=None, paged=False, spec_n=SPEC_N):
+    kw = {"spec_policy": policy, "spec_n": spec_n} if policy else {}
+    if paged:
+        kw.update(kv_blocks=96, kv_block_size=4)
+    return ExecutionBackend(model, params, **kw)
+
+
+def _run(backend, prompts, temperature, seed=0, n_samples=1):
+    h = backend.start_batch(prompts, n_samples, MAX_NEW, temperature,
+                            jax.random.key(seed), {})
+    while backend.decode_step(h):
+        pass
+    return backend.finalize(h)
+
+
+@pytest.fixture(scope="module")
+def plain_dense(model_params):
+    model, params = model_params
+    return _backend(model, params)
+
+
+@pytest.fixture(scope="module")
+def plain_paged(model_params):
+    model, params = model_params
+    return _backend(model, params, paged=True)
+
+
+@pytest.fixture(scope="module")
+def spec_ngram_paged(model_params):
+    model, params = model_params
+    return _backend(model, params, NGramDraftPolicy(), paged=True)
+
+
+@pytest.fixture(scope="module")
+def greedy_refs(plain_dense, plain_paged):
+    """Plain greedy outputs, the parity anchors (dense and paged)."""
+    prompts = _prompts(3)
+    return {False: _run(plain_dense, prompts, 0.0),
+            True: _run(plain_paged, prompts, 0.0)}
+
+
+# ========================================================= verify_tokens
+
+def test_verify_greedy_accepts_argmax_prefix_and_corrects():
+    V = 8
+    logits = np.full((2, 3, V), -10.0, np.float32)
+    # row 0: argmax chain 1, 2, 3; drafts (1, 2) fully accepted -> bonus 3
+    logits[0, 0, 1] = 0.0
+    logits[0, 1, 2] = 0.0
+    logits[0, 2, 3] = 0.0
+    # row 1: argmax at step 0 is 5; draft 1 rejected -> correction 5
+    logits[1, 0, 5] = 0.0
+    logits[1, 1, 6] = 0.0
+    logits[1, 2, 7] = 0.0
+    drafts = np.array([[1, 2], [1, 6]], np.int32)
+    al, toks, lps = verify_tokens(jnp.asarray(logits), jnp.asarray(drafts),
+                                  jax.random.key(0), 0.0, True)
+    al, toks, lps = np.asarray(al), np.asarray(toks), np.asarray(lps)
+    assert al.tolist() == [2, 0]
+    assert toks[0, :3].tolist() == [1, 2, 3]
+    assert toks[1, 0] == 5
+    lsm = np.asarray(jax.nn.log_softmax(jnp.asarray(logits), axis=-1))
+    np.testing.assert_allclose(lps[0, :3], lsm[0, np.arange(3), [1, 2, 3]],
+                               rtol=1e-6)
+    np.testing.assert_allclose(lps[1, 0], lsm[1, 0, 5], rtol=1e-6)
+
+
+def test_emission_distribution_equals_target():
+    rng = np.random.default_rng(1)
+    p = rng.dirichlet(np.ones(16))
+    for d in (0, 3, int(p.argmax())):
+        np.testing.assert_allclose(emission_distribution(p, d), p,
+                                   atol=1e-12)
+        assert abs(emission_distribution(p, d).sum() - 1.0) < 1e-12
+
+
+def _check_first_token_marginal(seed: int, d: int, temperature: float):
+    """The sampled accept/reject's first emitted token must be distributed
+    as the tempered target — the distribution-preservation property."""
+    V, B = 12, 8000
+    rng = np.random.default_rng(seed)
+    row = (rng.normal(size=(V,)) * 2.0).astype(np.float32)
+    logits = jnp.broadcast_to(jnp.asarray(row)[None, None], (B, 2, V))
+    drafts = jnp.full((B, 1), d, jnp.int32)
+    _, toks, _ = verify_tokens(logits, drafts, jax.random.key(seed),
+                               temperature, False)
+    first = np.asarray(toks)[:, 0]
+    target = np.asarray(jax.nn.softmax(jnp.asarray(row) / temperature),
+                        np.float64)
+    hist = np.bincount(first, minlength=V) / B
+    assert 0.5 * np.abs(hist - target).sum() < 0.05        # total variation
+    # the draft token is the one a broken residual would over/under-emit
+    se = np.sqrt(target[d] * (1 - target[d]) / B)
+    assert abs(hist[d] - target[d]) < 5 * se + 1e-3
+
+
+def test_sampled_verify_preserves_distribution():
+    for seed, d, temp in ((0, 3, 1.0), (1, 0, 0.5), (2, 7, 1.7)):
+        _check_first_token_marginal(seed, d, temp)
+
+
+@given(seed=st.integers(0, 2 ** 16), d=st.integers(0, 11),
+       temperature=st.floats(0.3, 2.0))
+@settings(max_examples=10, deadline=None)
+def test_sampled_verify_preserves_distribution_hyp(seed, d, temperature):
+    _check_first_token_marginal(seed, d, temperature)
+
+
+# ===================================================== greedy parity (pinned)
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("kind", ["ngram", "draft"])
+def test_greedy_spec_parity_engine_path(model_params, greedy_refs, kind,
+                                        paged):
+    model, params = model_params
+    policy = make_draft_policy(kind, draft_model=model, draft_params=params)
+    got = _run(_backend(model, params, policy, paged=paged), _prompts(3),
+               0.0)
+    for a, b in zip(greedy_refs[paged], got):
+        assert all(np.array_equal(x, y)
+                   for x, y in zip(a.samples, b.samples))
+        np.testing.assert_allclose(a.logprobs, b.logprobs,
+                                   atol=LOGPROB_ATOL)
+
+
+def test_greedy_spec_parity_serving_engine(model_params):
+    model, params = model_params
+    policy = make_draft_policy("draft", draft_model=model,
+                               draft_params=params)
+    prompts = _prompts(3, seed=5)
+    ref = ServingEngine(model, params, max_new_tokens=MAX_NEW,
+                        temperature=0.0).generate(prompts)
+    got = ServingEngine(model, params, max_new_tokens=MAX_NEW,
+                        temperature=0.0,
+                        backend=_backend(model, params, policy,
+                                         paged=True)).generate(prompts)
+    for a, b in zip(ref, got):
+        assert all(np.array_equal(x, y)
+                   for x, y in zip(a.samples, b.samples))
+        np.testing.assert_allclose(a.logprobs, b.logprobs,
+                                   atol=LOGPROB_ATOL)
+
+
+class _FlatRouter:
+    """Fixed-cost routing double: enough surface for the scheduler
+    (resolve_tier / required_samples / route_batch)."""
+
+    def __init__(self):
+        self.tiers = {"standard": SLATier("standard", energy_weight=0.5,
+                                          latency_weight=0.5)}
+
+    def resolve_tier(self, tier):
+        return self.tiers[tier] if isinstance(tier, str) else tier
+
+    def required_samples(self, tier):
+        return None
+
+    def route_batch(self, tiers, **kw):
+        return SimpleNamespace(
+            tier=self.resolve_tier(tiers[0]), tier_counts={},
+            assignment=object(), point_index=0, meets_caps=True,
+            batch_costs=None, energy_j=1.0, latency_s=1.0, notes=[])
+
+
+def _sched_results(backend, prompts, trace=None):
+    sched = ContinuousBatchingScheduler(
+        backend, _FlatRouter(),
+        SchedulerConfig(max_batch_requests=4, max_new_tokens=MAX_NEW,
+                        temperature=0.0),
+        trace=trace)
+    ids = []
+    for p in prompts:
+        adm = sched.submit(p, tier="standard")
+        assert adm.admitted, adm.reason
+        ids.append(adm.request_id)
+    done = sched.run_until_idle()
+    return [done[i].result for i in ids], sched
+
+
+def test_greedy_spec_parity_scheduler_path(model_params, plain_paged):
+    model, params = model_params
+    policy = make_draft_policy("draft", draft_model=model,
+                               draft_params=params)
+    prompts = _prompts(4, seed=9)
+    ref, _ = _sched_results(plain_paged, prompts)
+    trace = TraceStore()
+    got, sched = _sched_results(
+        _backend(model, params, policy, paged=True), prompts, trace=trace)
+    for a, b in zip(ref, got):
+        assert all(np.array_equal(x, y)
+                   for x, y in zip(a.samples, b.samples))
+        np.testing.assert_allclose(a.logprobs, b.logprobs,
+                                   atol=LOGPROB_ATOL)
+    # draft == target at temperature 0: every proposal accepted, and the
+    # measured outcome lands in the batch record and the "spec" trace
+    for rec in sched.records:
+        assert rec.spec_policy == "draft" and rec.spec_n == SPEC_N
+        assert rec.spec_proposed > 0
+        assert rec.spec_accepted == rec.spec_proposed
+        assert rec.spec_accept_rate == 1.0
+    assert trace.counts()["spec"] == len(sched.records)
+
+
+# =============================================== rollback / allocator safety
+
+def _drain_with_midflight_release(backend, seed: int):
+    prompts = _prompts(3, seed=seed)
+    h = backend.start_batch(prompts, 1, MAX_NEW, 0.7, jax.random.key(seed),
+                            {})
+    rng = np.random.default_rng(seed)
+    released = False
+    while backend.decode_step(h):
+        if not released and rng.random() < 0.5:
+            backend.release_sequences(h, [int(rng.integers(0, 3))])
+            released = True
+    res = backend.finalize(h)
+    alloc = backend.allocator
+    assert alloc.blocks_in_use == 0
+    assert alloc.blocks_in_use + alloc.blocks_free == alloc.n_blocks
+    for r in res:
+        assert all(len(s) == MAX_NEW for s in r.samples)
+        assert np.all(np.isfinite(r.logprobs))
+    return h
+
+
+def test_spec_rollback_allocator_clean(spec_ngram_paged):
+    h = _drain_with_midflight_release(spec_ngram_paged, seed=0)
+    with pytest.raises(RuntimeError):
+        spec_ngram_paged.release(h)     # finalize already returned the budget
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=8, deadline=None)
+def test_spec_rollback_allocator_clean_hyp(spec_ngram_paged, seed):
+    _drain_with_midflight_release(spec_ngram_paged, seed)
+
+
+def test_spec_slack_priced_into_admission(model_params, plain_paged,
+                                          spec_ngram_paged):
+    model, params = model_params
+    rb_plain = plain_paged.request_blocks(PLEN, MAX_NEW, 1)
+    rb_spec = spec_ngram_paged.request_blocks(PLEN, MAX_NEW, 1)
+    # the verify forward's tail writes need spec_n + 1 extra slots
+    assert rb_spec > rb_plain
+    h = spec_ngram_paged.start_batch(_prompts(1), 1, MAX_NEW, 0.0,
+                                     jax.random.key(0), {})
+    assert spec_ngram_paged.allocator.blocks_in_use == rb_spec
+    spec_ngram_paged.release(h)
+    assert spec_ngram_paged.allocator.blocks_in_use == 0
+
+
+def test_note_spec_validation_and_consumption(model_params, plain_paged,
+                                              spec_ngram_paged):
+    with pytest.raises(RuntimeError, match="no draft policy"):
+        plain_paged.note_spec(1)
+    with pytest.raises(ValueError, match="outside"):
+        spec_ngram_paged.note_spec(SPEC_N + 1)
+    # a noted depth applies to exactly one batch; 0 disables drafting
+    spec_ngram_paged.note_spec(0)
+    h0 = spec_ngram_paged.start_batch(_prompts(1), 1, MAX_NEW, 0.0,
+                                      jax.random.key(0), {})
+    assert h0.spec is None
+    spec_ngram_paged.release(h0)
+    h1 = spec_ngram_paged.start_batch(_prompts(1), 1, MAX_NEW, 0.0,
+                                      jax.random.key(0), {})
+    assert h1.spec is not None and h1.spec.n == SPEC_N
+    spec_ngram_paged.release(h1)
+
+
+# ================================================== accept-rate calibration
+
+def _planted_trace():
+    store = TraceStore()
+    store.ingest({"kind": "spec", "t_s": 0.1, "policy": "ngram", "n": 4,
+                  "proposed": 60, "accepted": 6, "model": "m",
+                  "tier": "economy"})
+    store.ingest({"kind": "spec", "t_s": 0.2, "policy": "ngram", "n": 4,
+                  "proposed": 40, "accepted": 4, "model": "m",
+                  "tier": "economy"})
+    store.ingest({"kind": "spec", "t_s": 0.3, "policy": "draft", "n": 4,
+                  "proposed": 50, "accepted": 45, "model": "m",
+                  "tier": "interactive"})
+    return store
+
+
+def test_fitter_recovers_planted_accept_rates():
+    profile, report = CalibrationFitter(_planted_trace(),
+                                        n_bootstrap=0).fit()
+    assert report.n_spec == 3
+    # pooled per-token Bernoulli MLE: (6 + 4) / (60 + 40)
+    assert profile.accept_rate_for(model="m", tier="economy",
+                                   policy="ngram") == pytest.approx(0.1)
+    assert profile.accept_rate_for(policy="draft") == pytest.approx(0.9)
+    assert profile.accept_rate_for(policy="missing", default=0.7) == 0.7
+    # fitted rates survive the artifact round-trip
+    rt = CalibrationProfile.from_dict(profile.to_dict())
+    assert rt.accept_rate_for(model="m", tier="economy",
+                              policy="ngram") == pytest.approx(0.1)
+    assert not rt.is_identity
+
+
+class _CostRouter:
+    """One-device v2-costed routing double with ``workload_map`` support —
+    what `SpecPlanner` sweeps draft depths through."""
+
+    def __init__(self, cfg):
+        from repro.core.devices import TPU_V5E
+        self.cfg = cfg
+        self.device = TPU_V5E
+        self.tier = SLATier("economy", energy_weight=1.0, latency_weight=0.0)
+
+    def resolve_tier(self, tier):
+        return self.tier
+
+    def required_samples(self, tier):
+        return None
+
+    def route_batch(self, tiers, samples=None, prompt_tokens=None,
+                    decode_tokens=None, workload_map=None):
+        from repro.core.decomposition import Workload, decompose
+        from repro.core.energy import plan_costs
+        w = Workload(batch=len(tiers), prompt_tokens=prompt_tokens,
+                     decode_tokens=decode_tokens, samples=samples or 1)
+        if workload_map is not None:
+            w = workload_map(w)
+        stages = decompose(self.cfg, w)
+        costs = plan_costs(stages, {s.name: self.device for s in stages},
+                           workload=w, model="v2")
+        return SimpleNamespace(tier=self.tier, tier_counts={},
+                               assignment=object(), point_index=0,
+                               meets_caps=True, batch_costs=costs,
+                               energy_j=costs.energy_j,
+                               latency_s=costs.makespan_s, notes=[])
+
+
+def test_spec_planner_depth_tracks_accept_rate():
+    router = _CostRouter(CFG)
+    for rate, expect in ((0.02, 0), (0.95, 4)):
+        planner = SpecPlanner("draft", depths=(0, 2, 4), accept_rate=rate)
+        d = planner.route_batch(router, ["economy"] * 4, samples=1,
+                                prompt_tokens=64, decode_tokens=64)
+        assert d.spec.n == expect, (rate, d.spec)
+    # the fitted profile drives the same flip through refresh()
+    profile, _ = CalibrationFitter(_planted_trace(), n_bootstrap=0).fit()
+    lo = SpecPlanner("ngram", depths=(0, 2, 4), model_name="m")
+    lo.refresh(profile)
+    assert lo.accept_rate_for("economy") == pytest.approx(0.1)
+    assert lo.route_batch(router, ["economy"] * 4, samples=1,
+                          prompt_tokens=64, decode_tokens=64).spec.n == 0
+    hi = SpecPlanner("draft", depths=(0, 2, 4), model_name="m")
+    hi.refresh(profile)
+    assert hi.route_batch(router, ["interactive"] * 4, samples=1,
+                          prompt_tokens=64, decode_tokens=64).spec.n == 4
+
+
+# ================================================= policies + workload math
+
+def test_ngram_prompt_lookup_and_fallback():
+    pol = NGramDraftPolicy(max_ngram=3)
+    h = np.array([5, 6, 7, 9, 5, 6, 7], np.int64)
+    d = pol.propose([h], 2)
+    assert d.shape == (1, 2) and d.dtype == np.int32
+    assert d[0].tolist() == [9, 5]       # continuation of the earlier match
+    h2 = np.array([1, 2, 3], np.int64)   # no repeat: repeat the last token
+    assert pol.propose([h2], 3)[0].tolist() == [3, 3, 3]
+    with pytest.raises(ValueError):
+        NGramDraftPolicy(max_ngram=0)
+
+
+def test_spec_supported_gates():
+    assert spec_supported(CFG)
+    import dataclasses
+    assert not spec_supported(dataclasses.replace(CFG, attn_window=4))
+    assert not spec_supported(dataclasses.replace(CFG, n_codebooks=2))
+
+
+def test_expected_tokens_and_spec_workload():
+    from repro.core.decomposition import Workload
+    assert expected_tokens_per_step(0, 0.5) == 1.0
+    assert expected_tokens_per_step(3, 1.0) == 4.0
+    assert expected_tokens_per_step(2, 0.5) == pytest.approx(1.75)
+    w = Workload(batch=2, prompt_tokens=8, decode_tokens=16, samples=1)
+    assert spec_workload(w, 0, 0.9) is w            # off: untouched
+    ws = spec_workload(w, 3, 0.5)
+    assert ws.spec_tokens_per_step == pytest.approx(
+        expected_tokens_per_step(3, 0.5))
+    assert ws.spec_queries_per_step == 4.0
+    assert ws.spec_query_factor == pytest.approx(
+        4.0 / ws.spec_tokens_per_step)
+    # defaults price exactly like the pre-speculation workload
+    assert w.spec_query_factor == 1.0
+
+
+def test_greedy_decode_is_rng_independent(plain_dense):
+    prompts = _prompts(2, seed=3)
+    a = _run(plain_dense, prompts, 0.0, seed=0)
+    b = _run(plain_dense, prompts, 0.0, seed=1234)
+    for x, y in zip(a, b):
+        assert all(np.array_equal(s, t)
+                   for s, t in zip(x.samples, y.samples))

@@ -145,7 +145,7 @@ def test_fitter_recovers_ground_truth_with_cis():
 
 
 def test_fitter_requires_usable_records():
-    with pytest.raises(ValueError, match="no energy or kernel"):
+    with pytest.raises(ValueError, match="no energy, kernel or spec"):
         CalibrationFitter(TraceStore()).fit()
 
 
