@@ -46,6 +46,25 @@ SPECS: Dict[str, List[Tuple[str, str]]] = {
         ("variants.draft.refit_depth", "exact"),
         ("variants.ngram.refit_depth", "exact"),
     ],
+    "prefix_pool": [
+        ("acceptance_all", "exact"),
+        ("parity_ok", "exact"),
+        ("hits_match_analytic", "exact"),
+        ("expected_hits", "exact"),
+        ("hit_rate", "higher"),
+        ("steady_prefill_ratio", "higher"),
+        ("prefill_bytes_ratio", "higher"),
+        ("throughput_ratio", "higher"),
+        ("batch.completed", "exact"),
+        ("pool.completed", "exact"),
+        ("pool.pool_hit_blocks", "exact"),
+        ("pool.pool_evictions", "exact"),
+        ("pool.prefill_bytes_moved", "lower"),
+        ("pool.steady_prefill_bytes_moved", "lower"),
+        ("tight.completed", "exact"),
+        ("tight.pool_evictions", "higher"),
+        ("tight.pool_hit_blocks", "higher"),
+    ],
     "serving_schedule": [
         ("acceptance_all", "exact"),
         ("scheduler.completed", "exact"),

@@ -43,6 +43,7 @@ BENCHES = [
     ("kv_paging", "benchmarks.kv_paging", "acceptance_all"),
     ("quant_serving", "benchmarks.quant_serving", "acceptance_all"),
     ("spec_decode", "benchmarks.spec_decode", "acceptance_all"),
+    ("prefix_pool", "benchmarks.prefix_pool", "acceptance_all"),
     ("bench_compare", "benchmarks.compare", "self_check_ok"),
 ]
 

@@ -52,6 +52,16 @@ def main() -> None:
                          "across repeated samples; supported archs only)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="paged KV cache: token slots per block")
+    ap.add_argument("--kv-pool", action="store_true",
+                    help="resident prefix pool (needs --kv-blocks): one "
+                         "physical cache outlives batches, a radix trie "
+                         "reuses cached full prefix blocks across the "
+                         "stream, and admission prices requests at their "
+                         "marginal (post-dedup) tail blocks")
+    ap.add_argument("--pool-evict", default="lru", choices=["lru", "off"],
+                    help="prefix-pool eviction of idle (zero-ref) trie "
+                         "blocks: LRU on demand, or off (resident set only "
+                         "grows; admission fails loudly when full)")
     ap.add_argument("--quant", default="bf16",
                     choices=["bf16", "int8", "int4"],
                     help="weight-only serving format (repro.quant): linear "
@@ -187,6 +197,8 @@ def main() -> None:
     backend = None
     if args.kv_int8 and args.kv_blocks is None:
         raise SystemExit("--kv-int8 requires --kv-blocks (paged cache)")
+    if args.kv_pool and args.kv_blocks is None:
+        raise SystemExit("--kv-pool requires --kv-blocks (paged cache)")
     spec_kwargs = ({"spec_policy": spec_policy, "spec_n": args.spec_n}
                    if spec_policy is not None else {})
     if args.kv_blocks is not None:
@@ -197,10 +209,15 @@ def main() -> None:
             backend = ExecutionBackend(model, params, kv_blocks=args.kv_blocks,
                                        kv_block_size=args.kv_block_size,
                                        kv_format=kv_format, obs=obs,
+                                       kv_pool=args.kv_pool,
+                                       pool_evict=args.pool_evict,
                                        **spec_kwargs)
             print(f"[kv] paged cache: {args.kv_blocks} blocks x "
                   f"{args.kv_block_size} slots ({kv_format}, "
                   f"{backend.kv_token_bytes} B/token)")
+            if args.kv_pool:
+                print(f"[kv] resident prefix pool: cross-batch block "
+                      f"reuse, evict={args.pool_evict}")
         else:
             print(f"[kv] arch {cfg.name!r} unsupported for paging; "
                   "dense cache")
@@ -254,12 +271,26 @@ def main() -> None:
                 rate = (f" a={rec.spec_accept_rate:.2f}"
                         if rec.spec_accept_rate is not None else "")
                 spec = f" spec={rec.spec_policy}:{rec.spec_n}{rate}"
+            pool = ""
+            if args.kv_pool:
+                pool = (f" pool_hits={rec.pool_hit_blocks}"
+                        f" evict={rec.pool_evictions}")
             print(f"[scheduler] batch {rec.batch_id}: "
                   f"{rec.n_requests} req ({rec.tier_mix}) -> point "
                   f"{rec.point_index} E={rec.energy_j * 1e3:.2f} mJ "
                   f"T={rec.latency_s * 1e3:.2f} ms "
                   f"queue={rec.queue_delay_s * 1e3:.2f} ms "
-                  f"caps_met={rec.meets_caps}{spec}")
+                  f"caps_met={rec.meets_caps}{spec}{pool}")
+        if args.kv_pool and backend is not None and \
+                backend.prefix_pool is not None:
+            st = sched.stats()
+            resident = backend.prefix_pool.blocks_resident
+            cached = resident * args.kv_block_size * backend.kv_token_bytes
+            print(f"[kv] prefix pool: {st['pool_hit_blocks']} hit blocks, "
+                  f"{st['pool_evictions']} evictions, "
+                  f"{st['prefill_bytes_saved'] / 1e3:.1f} kB prefill "
+                  f"saved; {resident} blocks resident "
+                  f"({cached / 1e3:.1f} kB cached)")
         results = [done[i].result for i in ids]
     else:
         results = engine.generate(prompts, n_samples=args.samples,

@@ -196,6 +196,26 @@ def copy_cache_blocks(cache: Dict, src: jnp.ndarray, dst: jnp.ndarray) -> Dict:
                        for name, e in cache["blocks"].items()}}
 
 
+def reset_cache_block_positions(cache: Dict, gids: jnp.ndarray) -> Dict:
+    """Invalidate the position slots of blocks ``gids`` in every attention
+    pool. A resident pooled cache outlives batches, so a block returning
+    from the free list still carries its previous occupant's positions —
+    and a stale slot whose old position falls inside the new sequence's
+    visible window would leak stale KV into attention (a partially filled
+    tail block leaves exactly such slots). Only ``pos`` needs resetting:
+    position ``-1`` masks the slot, so stale k/v bytes are unreachable."""
+    def rp(entry: Dict, stacked: bool) -> Dict:
+        out = dict(entry)
+        pos = entry["pos"]
+        out["pos"] = (pos.at[:, gids].set(-1) if stacked
+                      else pos.at[gids].set(-1))
+        return out
+
+    return {"prefix": [rp(e, False) for e in cache["prefix"]],
+            "blocks": {name: rp(e, True)
+                       for name, e in cache["blocks"].items()}}
+
+
 def kv_bytes_per_token(cfg: ArchConfig, bytes_per_el: int = 2) -> int:
     """KV-cache bytes one token position occupies across the whole stack
     (k + v + int32 position, summed over attention layers) — the unit that
@@ -216,6 +236,16 @@ def paged_cache_bytes(cfg: ArchConfig, n_blocks: int, block_size: int,
     """Real memory of a paged pool: the block budget the serving admission
     control prices requests against."""
     return n_blocks * block_size * kv_bytes_per_token(cfg, bytes_per_el)
+
+
+def prefix_pool_bytes(cfg: ArchConfig, n_resident: int, block_size: int,
+                      bytes_per_el: int = 2) -> int:
+    """Bytes of cached KV the resident prefix pool currently indexes
+    (`repro.serving.prefix_pool.PrefixPool.blocks_resident` blocks). The
+    physical array is `paged_cache_bytes` of the whole budget regardless —
+    this prices what the trie's residency is *worth*: prefill bytes the next
+    hit on each chain does not have to move."""
+    return n_resident * block_size * kv_bytes_per_token(cfg, bytes_per_el)
 
 
 def cache_bytes(cfg: ArchConfig, batch: int, cache_len: int,

@@ -40,7 +40,8 @@ DEFAULT_BUCKETS: Tuple[float, ...] = (
     0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
 
 # edges for ratio-valued observations in [0, 1] (e.g. speculative-decode
-# accept rates): uniform tenths, with the 1.0 edge catching exact unity
+# accept rates, per-batch prefix-pool hit ratios): uniform tenths, with the
+# 1.0 edge catching exact unity
 RATIO_BUCKETS: Tuple[float, ...] = (
     0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0)
 

@@ -199,6 +199,10 @@ class TraceStore:
             # allocation pressure (CPQ residuals) alongside batch energy
             "prefill_bytes_saved": float(getattr(record,
                                                  "prefill_bytes_saved", 0.0)),
+            # resident prefix pool: cross-batch block reuse and the LRU
+            # evictions this batch's tails forced
+            "pool_hit_blocks": int(getattr(record, "pool_hit_blocks", 0)),
+            "pool_evictions": int(getattr(record, "pool_evictions", 0)),
             # serving formats (repro.quant): per-format duty factors and the
             # effective bytes the energy model should price
             "quant": str(getattr(record, "quant", "bf16")),

@@ -3,6 +3,7 @@ from repro.serving.backend import (BlockAllocator, ExecutionBackend,
                                    PagedBatchLayout, bucket_key,
                                    build_paged_layout)
 from repro.serving.engine import ServingEngine
+from repro.serving.prefix_pool import PrefixPool
 from repro.serving.scheduler import (AdmissionResult, BatchRecord,
                                      CompletedRequest,
                                      ContinuousBatchingScheduler,
@@ -13,4 +14,5 @@ __all__ = ["ServingEngine", "GenerationResult", "ExecutionBackend",
            "InFlightBatch", "bucket_key", "ContinuousBatchingScheduler",
            "RequestQueue", "SchedulerConfig", "ServeRequest",
            "AdmissionResult", "BatchRecord", "CompletedRequest",
-           "BlockAllocator", "PagedBatchLayout", "build_paged_layout"]
+           "BlockAllocator", "PagedBatchLayout", "build_paged_layout",
+           "PrefixPool"]

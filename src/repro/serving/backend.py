@@ -92,6 +92,7 @@ from repro.models import cache as cache_mod
 from repro.models.model import Model
 from repro.obs import NULL_OBS
 from repro.obs.metrics import RATIO_BUCKETS
+from repro.serving.prefix_pool import PrefixPool
 from repro.spec.policy import spec_supported
 from repro.spec.verify import verify_tokens
 
@@ -132,6 +133,10 @@ class BlockAllocator:
         self.block_size = block_size
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._ref: Dict[int, int] = {}
+        # blocks indexed by a resident PrefixPool (bid -> owning-prefix
+        # description): their cached KV content must never silently return
+        # to the free list — the pool's evict path unprotects first
+        self._protected: Dict[int, str] = {}
 
     @property
     def blocks_free(self) -> int:
@@ -177,13 +182,36 @@ class BlockAllocator:
         self._ref[bid] = ref - 1
         return new, True
 
+    def protect(self, bid: int, owner: str) -> None:
+        """Mark a live block as trie-resident (`repro.serving.prefix_pool`):
+        its last reference belongs to the pool's index, and `free` refuses
+        to return it to the free list — eviction must go through the pool."""
+        if bid not in self._ref:
+            raise KeyError(f"protect of unallocated block {bid}")
+        self._protected[bid] = owner
+
+    def unprotect(self, bid: int) -> None:
+        self._protected.pop(bid, None)
+
+    def protected_owner(self, bid: int) -> Optional[str]:
+        return self._protected.get(bid)
+
     def free(self, bid: int) -> bool:
         """Drop one reference; returns True when the block physically went
         back to the free list. Freeing an unallocated block raises — the
-        double-free guard the invariant tests pin."""
+        double-free guard the invariant tests pin. Freeing the *last*
+        reference of a trie-resident block also raises (with the block id
+        and owning prefix named): cached KV returning to the free list
+        behind the pool's back would corrupt the prefix index."""
         ref = self._ref.get(bid)
         if ref is None:
             raise RuntimeError(f"double free / free of unallocated block {bid}")
+        owner = self._protected.get(bid)
+        if owner is not None and ref == 1:
+            raise RuntimeError(
+                f"free of trie-resident block {bid} (owning prefix: "
+                f"{owner}) would return an indexed block to the free list; "
+                "evict it through PrefixPool.evict instead")
         if ref > 1:
             self._ref[bid] = ref - 1
             return False
@@ -206,10 +234,18 @@ class PagedBatchLayout:
     copy_src: np.ndarray               # CoW pairs: partial prefix block ->
     copy_dst: np.ndarray               #   each repeat's private copy
     seq_gids: List[List[int]]          # allocator ids referenced per sequence
+    # prefix-pool path (`hit_chains` given): tables carry GLOBAL allocator
+    # ids straight into the backend's resident cache, and each prompt's
+    # leading ``hit_counts[i]`` prefill blocks are already filled — only the
+    # tail from ``hit_counts[i] * block_size`` needs prefilling
+    pooled: bool = False
+    hit_counts: List[int] = field(default_factory=list)
 
 
 def build_paged_layout(allocator: BlockAllocator, plen: int, max_new: int,
-                       repeats: Sequence[int]) -> PagedBatchLayout:
+                       repeats: Sequence[int],
+                       hit_chains: Optional[Sequence[List[int]]] = None
+                       ) -> PagedBatchLayout:
     """Allocate one batch's blocks and build its tables.
 
     Per request: the ``plen // bs`` full prefix blocks are allocated once and
@@ -222,16 +258,31 @@ def build_paged_layout(allocator: BlockAllocator, plen: int, max_new: int,
     never cached, so the last position is ``plen + max_new - 2`` (prefill end
     for max_new == 1) and sequences never pay for a block that would hold
     only the unwritten ``plen + max_new - 1`` slot.
+
+    Pool-lookup path: ``hit_chains[i]`` is prompt *i*'s longest cached
+    full-prefix block chain from the resident `PrefixPool` — already filled,
+    already holding one reference per repeat (``PrefixPool.acquire``). Those
+    blocks head the prompt's tables instead of fresh allocations, only the
+    tail is newly allocated, and every table carries GLOBAL allocator ids
+    (the physical cache is the backend's single resident pool, so no local
+    remap exists). The partial-tail CoW fork is unchanged — partial blocks
+    are never pool-shared — so the whole block schedule stays static and
+    decode jit-friendly.
     """
     bs = allocator.block_size
     n_logical = max(-(-(plen + max_new - 1) // bs), 1)
     full_prefix = plen // bs
     has_partial = plen % bs != 0
+    pooled = hit_chains is not None
+    if not pooled:
+        hit_chains = [[] for _ in repeats]
 
     pool_gids: List[int] = []
     local_of: Dict[int, int] = {}
 
     def loc(gid: int) -> int:
+        if pooled:                     # resident pool: global ids ARE the map
+            return gid
         if gid not in local_of:
             local_of[gid] = len(pool_gids)
             pool_gids.append(gid)
@@ -243,11 +294,15 @@ def build_paged_layout(allocator: BlockAllocator, plen: int, max_new: int,
     copy_src: List[int] = []
     copy_dst: List[int] = []
 
-    for k in repeats:
-        shared = [allocator.alloc() for _ in range(full_prefix)]
+    for k, hits in zip(repeats, hit_chains):
+        if len(hits) > full_prefix:
+            raise ValueError(f"hit chain of {len(hits)} blocks exceeds the "
+                             f"{full_prefix} full prefix blocks of plen={plen}")
+        shared = list(hits) + [allocator.alloc()
+                               for _ in range(full_prefix - len(hits))]
         part = allocator.alloc() if has_partial else None
         for _ in range(k - 1):
-            for g in shared:
+            for g in shared[len(hits):]:   # hit refs already taken by acquire
                 allocator.fork(g)
             if part is not None:
                 allocator.fork(part)
@@ -259,7 +314,7 @@ def build_paged_layout(allocator: BlockAllocator, plen: int, max_new: int,
             if part is not None:
                 wg, copied = allocator.cow(part)
                 if copied:
-                    copy_src.append(local_of[part])
+                    copy_src.append(loc(part))
                     copy_dst.append(loc(wg))
                 gids.append(wg)
                 row.append(loc(wg))
@@ -271,13 +326,16 @@ def build_paged_layout(allocator: BlockAllocator, plen: int, max_new: int,
             seq_gids.append(gids)
 
     return PagedBatchLayout(
-        block_size=bs, n_pool_blocks=len(pool_gids),
+        block_size=bs,
+        n_pool_blocks=allocator.n_blocks if pooled else len(pool_gids),
         kv_len=plen + max_new,
         prefill_table=np.asarray(prefill_rows, np.int32),
         decode_table=np.asarray(decode_rows, np.int32),
         copy_src=np.asarray(copy_src, np.int32),
         copy_dst=np.asarray(copy_dst, np.int32),
-        seq_gids=seq_gids)
+        seq_gids=seq_gids,
+        pooled=pooled,
+        hit_counts=[len(h) for h in hit_chains])
 
 
 @dataclass
@@ -327,6 +385,10 @@ class InFlightBatch:
     paged: Optional[PagedBatchLayout] = None
     block_table: Optional[jax.Array] = None    # decode table on device
     prefill_bytes_saved: float = 0.0   # KV bytes prefix sharing did not move
+    # prefix-pool accounting (pooled batches only; h.cache is None — the
+    # physical cache is the backend's resident pool)
+    pool_hit_blocks: int = 0           # trie-cached blocks this batch reused
+    pool_evictions: int = 0            # idle blocks evicted to fit the tail
     freed_seqs: Set[int] = field(default_factory=set)   # early-released rows
     spec: Optional[SpecState] = None   # set when this batch drafts (n > 0)
 
@@ -361,7 +423,8 @@ class ExecutionBackend:
                  max_slots: Optional[int] = None,
                  kv_blocks: Optional[int] = None, kv_block_size: int = 16,
                  kv_format: str = "bf16", obs=None,
-                 spec_policy=None, spec_n: int = 0):
+                 spec_policy=None, spec_n: int = 0,
+                 kv_pool: bool = False, pool_evict: str = "lru"):
         self.model = model
         self.params = params
         self.eos_token = eos_token
@@ -394,6 +457,8 @@ class ExecutionBackend:
         self.quant_format = params_quant_format(params)
         self.weight_bytes = param_bytes(params)
         self.allocator: Optional[BlockAllocator] = None
+        self.prefix_pool = None
+        self._pool_cache = None            # resident physical cache (pooled)
         if kv_blocks is not None:
             if not cache_mod.paged_supported(model.cfg):
                 raise ValueError(
@@ -401,6 +466,15 @@ class ExecutionBackend:
                     f"{model.cfg.name!r} (see repro.models.cache."
                     "paged_supported); use the dense max_slots budget")
             self.allocator = BlockAllocator(kv_blocks, kv_block_size)
+            if kv_pool:
+                # global prefix-sharing pool: ONE resident physical cache of
+                # kv_blocks blocks outlives every batch, and the radix trie
+                # indexes filled full-prefix blocks for cross-batch reuse
+                self.prefix_pool = PrefixPool(self.allocator,
+                                              evict=pool_evict)
+        elif kv_pool:
+            raise ValueError("kv_pool requires the paged cache (set "
+                             "kv_blocks)")
         # live handles: release() must be called exactly once per started
         # batch — a second release raises instead of silently driving the
         # budget negative (the double-release regression).
@@ -418,6 +492,11 @@ class ExecutionBackend:
                                    static_argnames=("kv_len", "greedy"))
         self._spec_verify_jit = jax.jit(self._spec_verify,
                                         static_argnames=("kv_len", "greedy"))
+        self._tail_prefill_jit = jax.jit(self._tail_prefill,
+                                         static_argnames=("kv_len",))
+        self._copy_blocks_jit = jax.jit(cache_mod.copy_cache_blocks)
+        self._reset_blocks_jit = jax.jit(
+            cache_mod.reset_cache_block_positions)
 
     def set_obs(self, obs) -> None:
         """Attach (or detach, ``None``) a `repro.obs.Observability` bundle.
@@ -462,6 +541,25 @@ class ExecutionBackend:
                     "serving_spec_tokens_per_step",
                     "Tokens committed per decode step "
                     "(last speculative verify)"),
+                "pool_hits": reg.counter(
+                    "serving_prefix_pool_hits_total",
+                    "Full prefix blocks resolved from the resident "
+                    "prefix-pool trie (prefill skipped)"),
+                "pool_misses": reg.counter(
+                    "serving_prefix_pool_misses_total",
+                    "Full prefix blocks prefilled fresh and inserted "
+                    "into the trie"),
+                "pool_evictions": reg.counter(
+                    "serving_prefix_pool_evictions_total",
+                    "Idle (zero-ref) trie blocks evicted LRU to fit "
+                    "new tails"),
+                "pool_resident": reg.gauge(
+                    "serving_prefix_pool_blocks_resident",
+                    "KV blocks currently indexed by the prefix-pool trie"),
+                "pool_ratio": reg.histogram(
+                    "serving_prefix_pool_hit_ratio",
+                    "Per-batch fraction of full prefix blocks served "
+                    "from the trie", buckets=RATIO_BUCKETS),
             }
 
     def _note_occupancy(self) -> None:
@@ -471,6 +569,9 @@ class ExecutionBackend:
             used = self.allocator.blocks_in_use
             self._m["kv_blocks"].set(used)
             self._m["kv_high"].set_max(used)
+            if self.prefix_pool is not None:
+                self._m["pool_resident"].set(
+                    self.prefix_pool.blocks_resident)
         else:
             self._m["slots"].set(self.slots_in_use)
 
@@ -485,6 +586,31 @@ class ExecutionBackend:
             # CoW fan-out of the shared partial prefix block: fused into the
             # prefill step so the batch is decode-ready in one dispatch
             cache = cache_mod.copy_cache_blocks(cache, copy_src, copy_dst)
+        return logits[:, -1], cache
+
+    def _tail_prefill(self, params, tokens, start_pos, cache, extras,
+                      block_table, *, kv_len):
+        """Prefill only a prompt's tail against cached prefix blocks.
+
+        ``decode=True`` forces the cache-attending branches at S > 1 (the
+        speculative-verify mechanism): the tail queries scatter their KV
+        into the resident pool through ``block_table`` *before* attending,
+        then each attends to every cached position ``<= its own`` — the hit
+        chain's prefix KV plus the tail itself, masked causally by position.
+        The gathered reference path reduces over the same ``kv_len = plen``
+        positions in the same order as a full prefill, so tail logits are
+        *bit-identical* to prefilling the whole prompt (pinned by
+        ``tests/test_prefix_pool.py``); a zero-hit prompt runs its whole
+        prompt through this path (start_pos 0) with the same guarantee."""
+        B, S = tokens.shape[0], tokens.shape[1]
+        pos = start_pos + jnp.arange(S, dtype=jnp.int32)[None, :]
+        pos = jnp.broadcast_to(pos, (B, S))
+        if self.model.cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+        b = {"tokens": tokens, "positions": pos, "block_table": block_table,
+             **extras}
+        logits, cache, _ = self.model.forward(params, b, cache,
+                                              kv_len=kv_len, decode=True)
         return logits[:, -1], cache
 
     def _decode_step(self, params, tok, step_pos, cache, rng, temperature,
@@ -556,20 +682,31 @@ class ExecutionBackend:
 
     @property
     def pool_blocks_resident(self) -> Optional[int]:
-        """Physical pool blocks resident right now: live batches' pools are
+        """Physical pool blocks resident right now. Per-batch pools are
         whole arrays until retirement, so this can exceed ``blocks_in_use``
-        after early releases (the budget frees before the memory does)."""
+        after early releases (the budget frees before the memory does). With
+        the prefix pool the physical cache is ONE resident array of
+        ``kv_blocks`` blocks shared by every batch — no transient overcommit
+        remains (the ROADMAP's cross-batch physical block sharing)."""
         if self.allocator is None:
             return None
+        if self.prefix_pool is not None:
+            return self.allocator.n_blocks if self._pool_cache is not None \
+                else 0
         return sum(h.paged.n_pool_blocks for h in self._live.values()
                    if h.paged is not None)
 
     @property
     def capacity_free(self) -> Optional[int]:
         """Admission budget remaining, in this backend's currency: KV blocks
-        (paged) or sequence slots (dense); None = unbounded."""
+        (paged) or sequence slots (dense); None = unbounded. Idle prefix-pool
+        blocks count as free — `_start_batch_pooled` evicts them on demand —
+        so a cache full of reclaimable prefixes never starves admission."""
         if self.allocator is not None:
-            return self.allocator.blocks_free
+            free = self.allocator.blocks_free
+            if self.prefix_pool is not None:
+                free += self.prefix_pool.evictable_blocks
+            return free
         return self.slots_free
 
     @property
@@ -590,23 +727,65 @@ class ExecutionBackend:
         `request_blocks` so admission stays exact."""
         return self.spec_n + 1 if self.spec_policy is not None else 0
 
-    def request_blocks(self, plen: int, max_new: int, n_samples: int) -> int:
+    def request_blocks(self, plen: int, max_new: int, n_samples: int,
+                       prompt: Optional[np.ndarray] = None) -> int:
         """Block cost of a request at shared-prefix price: the full prefix
         blocks once, plus per-sample privates (the CoW copy of a partial
         prefix block and the decode blocks). Mirrors `build_paged_layout`
         exactly — written positions end at ``plen + max_new - 2``, plus the
-        speculative slack horizon when a draft policy is attached."""
+        speculative slack horizon when a draft policy is attached.
+
+        With the resident prefix pool and the prompt tokens given, cost is
+        *marginal* against `capacity_free` (= free + evictable blocks): a
+        hit block already pinned by a live batch (refcount >= 2) is free —
+        the batch only allocates the post-dedup tail — while an *idle* hit
+        still charges one unit, because admitting the request pins it and
+        removes it from the evictable headroom `capacity_free` counted.
+        (Pricing idle hits free double-counts them against that headroom:
+        admission could pass while the execution-time eviction loop finds
+        the hits it needs to reclaim pinned under itself.) Under
+        ``pool_evict="off"`` there is no evictable headroom to consume, so
+        every hit is free and the price is the pure tail. The lookup is
+        LRU-neutral (``touch=False``)."""
         bs = self.allocator.block_size
         horizon = max_new + self._spec_slack()
         n_logical = max(-(-(plen + horizon - 1) // bs), 1)
         full_prefix = plen // bs
-        return full_prefix + n_samples * (n_logical - full_prefix)
+        shared = full_prefix
+        if prompt is not None and self.prefix_pool is not None:
+            chain = self.prefix_pool.lookup(prompt, self._max_hit(plen),
+                                            touch=False)
+            if self.prefix_pool.evict_policy == "off":
+                free_hits = len(chain)
+            else:
+                free_hits = sum(1 for g in chain
+                                if self.allocator.refcount(g) >= 2)
+            shared = full_prefix - free_hits
+        return shared + n_samples * (n_logical - full_prefix)
 
-    def request_cost(self, plen: int, max_new: int, n_samples: int) -> int:
+    def request_cost(self, plen: int, max_new: int, n_samples: int,
+                     prompt: Optional[np.ndarray] = None) -> int:
         """Admission cost in ``capacity_free`` units (blocks or slots)."""
         if self.allocator is not None:
-            return self.request_blocks(plen, max_new, n_samples)
+            return self.request_blocks(plen, max_new, n_samples,
+                                       prompt=prompt)
         return n_samples
+
+    def marginal_request_cost(self, prompt: np.ndarray, max_new: int,
+                              n_samples: int) -> int:
+        """Post-dedup admission price of one request (the scheduler's
+        per-batch budget check): identical to `request_cost` without a pool,
+        cheaper by the already-pinned trie prefix blocks with one (see
+        `request_blocks` for why idle hits still charge under LRU)."""
+        return self.request_cost(len(prompt), max_new, n_samples,
+                                 prompt=np.asarray(prompt))
+
+    def _max_hit(self, plen: int) -> int:
+        """Cap on trie-reusable full prefix blocks: at least one prompt
+        token must remain in the tail — the tail forward produces the
+        position ``plen - 1`` logits the first sample comes from, and a
+        fully cached prompt would otherwise re-scatter into shared blocks."""
+        return (plen - 1) // self.allocator.block_size
 
     @property
     def kv_token_bytes(self) -> int:
@@ -689,7 +868,14 @@ class ExecutionBackend:
         tracer = self.obs.tracer
         t0 = time.perf_counter() if tracer.enabled else 0.0
         n_spec = self._consume_spec_n()
-        if self.allocator is not None:
+        if self.prefix_pool is not None:
+            h = self._start_batch_pooled(prompts, repeats, rep, base, B,
+                                         plen, max_new, temperature, rng,
+                                         extras, mc)
+            # only the post-dedup tails were prefilled
+            prefilled = (len(prompts) * plen
+                         - h.pool_hit_blocks * self.allocator.block_size)
+        elif self.allocator is not None:
             h = self._start_batch_paged(prompts, repeats, rep, base, B, plen,
                                         max_new, temperature, rng, extras, mc)
             prefilled = len(prompts) * plen     # one row per unique prompt
@@ -720,6 +906,16 @@ class ExecutionBackend:
         if self._m is not None:
             self._m["tokens_in"].inc(prefilled)
             self._m["tokens_out"].inc(B)        # first token per sequence
+            if self.prefix_pool is not None and h.paged is not None:
+                lookupable = len(prompts) * (plen // self.allocator.block_size)
+                misses = lookupable - h.pool_hit_blocks
+                self._m["pool_hits"].inc(h.pool_hit_blocks)
+                self._m["pool_misses"].inc(misses)
+                if h.pool_evictions:
+                    self._m["pool_evictions"].inc(h.pool_evictions)
+                if lookupable:
+                    self._m["pool_ratio"].observe(
+                        h.pool_hit_blocks / lookupable)
             self._note_occupancy()
         return h
 
@@ -812,6 +1008,131 @@ class ExecutionBackend:
             paged=layout, block_table=jnp.asarray(layout.decode_table),
             prefill_bytes_saved=float((B - R) * plen * self.kv_token_bytes))
 
+    def _ensure_pool_cache(self):
+        """The single resident physical cache (lazy: sized to the whole
+        ``kv_blocks`` budget, so it is only materialized once serving
+        actually starts). Block tables index it with global allocator ids;
+        it outlives every batch."""
+        if self._pool_cache is None:
+            self._pool_cache = self.model.init_paged_cache(
+                self.allocator.n_blocks, self.allocator.block_size,
+                kv_dtype=jnp.int8 if self.kv_format == "int8" else None)
+        return self._pool_cache
+
+    def _start_batch_pooled(self, prompts, repeats, rep, base, B, plen,
+                            max_new, temperature, rng, extras,
+                            mc) -> InFlightBatch:
+        """Paged start with the resident prefix pool: resolve each prompt's
+        longest cached block chain (pinning it with per-sequence refs),
+        evict idle LRU blocks to fit the post-dedup tails, then prefill
+        *only the tails* — grouped by hit depth so every forward keeps a
+        static shape — and finally index the freshly filled full-prefix
+        chains for the batches that follow."""
+        pool = self.prefix_pool
+        alloc = self.allocator
+        bs = alloc.block_size
+        R = len(prompts)
+        full_prefix = plen // bs
+        # 1. acquire hit chains first: refs pin them, so the eviction pass
+        #    below can never reclaim a block this batch just resolved
+        hit_chains = [pool.acquire(p, self._max_hit(plen), holders=k)
+                      for p, k in zip(prompts, repeats)]
+        horizon = max_new + self._spec_slack()
+        n_logical = max(-(-(plen + horizon - 1) // bs), 1)
+        need = sum(full_prefix - len(ch) + k * (n_logical - full_prefix)
+                   for ch, k in zip(hit_chains, repeats))
+        # 2. make room for the tails (LRU over idle trie leaves only)
+        evicted = pool.ensure_free(need)
+        if need > alloc.blocks_free:
+            for ch, k in zip(hit_chains, repeats):
+                for g in ch:
+                    for _ in range(k):
+                        alloc.free(g)
+            raise RuntimeError(
+                f"KV block budget exceeded: need {need} tail blocks > "
+                f"{alloc.blocks_free} free after {evicted} eviction(s) "
+                "(scheduler must check capacity_free)")
+        # 3. static block schedule over GLOBAL ids (allocation cannot fail
+        #    past the check above)
+        layout = build_paged_layout(alloc, plen, horizon, repeats,
+                                    hit_chains=hit_chains)
+        cache = self._ensure_pool_cache()
+        try:
+            # invalidate the pos slots of every block allocated this batch:
+            # the resident cache outlives batches, and a block back from the
+            # free list still carries its previous occupant's positions — a
+            # stale slot in a partially filled tail block would become
+            # visible the moment decode advances past it
+            hit_gids = {int(g) for ch in hit_chains for g in ch}
+            fresh = sorted({int(g) for gids in layout.seq_gids
+                            for g in gids} - hit_gids)
+            if fresh:
+                cache = self._reset_blocks_jit(
+                    cache, jnp.asarray(fresh, jnp.int32))
+            prefill_extras = {k: jnp.asarray(v) for k, v in extras.items()}
+            decode_extras = {k: jnp.repeat(jnp.asarray(v), rep, axis=0)
+                             for k, v in extras.items()}
+            # 4. tail-only prefill, one static-shape forward per hit depth
+            groups: Dict[int, List[int]] = {}
+            for i, c in enumerate(layout.hit_counts):
+                groups.setdefault(c, []).append(i)
+            last_rows: List[Any] = [None] * R
+            for c, idxs in sorted(groups.items()):
+                gl, cache = self._tail_prefill_jit(
+                    self.params, jnp.asarray(base[idxs][:, c * bs:]),
+                    jnp.asarray(c * bs, jnp.int32), cache,
+                    {k: v[jnp.asarray(idxs)]
+                     for k, v in prefill_extras.items()},
+                    jnp.asarray(layout.prefill_table[idxs]), kv_len=plen)
+                for j, i in enumerate(idxs):
+                    last_rows[i] = gl[j]
+            last_logits = jnp.stack(last_rows, axis=0)
+            if layout.copy_src.size > 0:
+                # CoW fan-out of the shared partial prefix block (partials
+                # are never pool-shared — same schedule as per-batch paging)
+                cache = self._copy_blocks_jit(cache,
+                                              jnp.asarray(layout.copy_src),
+                                              jnp.asarray(layout.copy_dst))
+        except BaseException:
+            # every reference the batch took (hits included — their holder
+            # refs unwind to the trie ref) must return, or a failed prefill
+            # permanently shrinks the budget
+            for gids in layout.seq_gids:
+                for g in gids:
+                    alloc.free(g)
+            raise
+        self._pool_cache = cache
+        # 5. index the freshly filled full-prefix chains (post-success: the
+        #    trie must never point at unfilled blocks). A same-prefix
+        #    sibling within this batch keeps the first writer's blocks.
+        for i, p in enumerate(prompts):
+            pool.insert(p, [int(g) for g in
+                            layout.prefill_table[i][:full_prefix]])
+        hit_blocks = sum(layout.hit_counts)
+
+        # fan the unique-prompt logits out to the repeats, then sample with
+        # the same key/shape as the dense path — bit-identical first token
+        rng, sub = jax.random.split(rng)
+        lf = jnp.repeat(last_logits.astype(jnp.float32), rep, axis=0)
+        logp0 = jax.nn.log_softmax(lf, axis=-1)
+        if temperature > 0:
+            tok = jax.random.categorical(sub, lf / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(lf, axis=-1)
+        lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
+
+        tail_tokens = sum(plen - c * bs for c in layout.hit_counts)
+        return InFlightBatch(
+            prompts=list(prompts), repeats=repeats, plen=plen,
+            max_new=max_new, temperature=temperature, rng=rng,
+            extras=decode_extras, cache=None, tok=tok, step=1,
+            out_toks=[np.asarray(tok)],
+            out_lps=[np.asarray(lp if not mc else lp.mean(-1))],
+            paged=layout, block_table=jnp.asarray(layout.decode_table),
+            prefill_bytes_saved=float((B * plen - tail_tokens)
+                                      * self.kv_token_bytes),
+            pool_hit_blocks=hit_blocks, pool_evictions=evicted)
+
     def decode_step(self, h: InFlightBatch) -> bool:
         """Advance one token (or one draft/verify round on a speculative
         batch); returns True while the batch still has decode steps left
@@ -826,11 +1147,17 @@ class ExecutionBackend:
         h.rng, sub = jax.random.split(h.rng)
         step_pos = jnp.asarray(h.plen + h.step - 1, jnp.int32)
         tok_in = h.tok[:, None] if not mc else h.tok[:, None, :]
-        h.tok, lp, h.cache = self._decode_jit(
-            self.params, tok_in, step_pos, h.cache, sub, h.temperature,
+        pooled = h.cache is None           # resident pool, shared by batches
+        cache = self._pool_cache if pooled else h.cache
+        h.tok, lp, cache = self._decode_jit(
+            self.params, tok_in, step_pos, cache, sub, h.temperature,
             h.extras, h.block_table,
             kv_len=h.paged.kv_len if h.paged is not None else None,
             greedy=h.temperature == 0.0)
+        if pooled:
+            self._pool_cache = cache
+        else:
+            h.cache = cache
         h.out_toks.append(np.asarray(h.tok))
         h.out_lps.append(np.asarray(lp if not mc else lp.mean(-1)))
         h.step += 1
@@ -871,11 +1198,17 @@ class ExecutionBackend:
         last = np.asarray([row[-1] for row in sp.toks], np.int32)
         toks_in = np.concatenate([last[:, None], drafts], axis=1)
         base_pos = np.asarray(h.plen + sp.committed - 1, np.int32)
-        accept_len, out_tokens, out_lps, h.cache = self._spec_verify_jit(
+        pooled = h.cache is None           # resident pool, shared by batches
+        cache = self._pool_cache if pooled else h.cache
+        accept_len, out_tokens, out_lps, cache = self._spec_verify_jit(
             self.params, jnp.asarray(toks_in), jnp.asarray(base_pos),
-            h.cache, sub, h.temperature, h.extras, h.block_table,
+            cache, sub, h.temperature, h.extras, h.block_table,
             kv_len=h.paged.kv_len if h.paged is not None else None,
             greedy=h.temperature == 0.0)
+        if pooled:
+            self._pool_cache = cache
+        else:
+            h.cache = cache
         accept_len = np.asarray(accept_len)
         out_tokens = np.asarray(out_tokens)
         out_lps = np.asarray(out_lps)

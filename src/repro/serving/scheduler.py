@@ -121,6 +121,11 @@ class BatchRecord:
     reroute: bool                      # first batch after a re-anneal
     kv_blocks_in_use: Optional[int] = None   # paged backend occupancy
     prefill_bytes_saved: float = 0.0   # KV bytes prefix sharing avoided
+    # resident prefix pool (cross-batch block reuse): trie-cached blocks
+    # this batch reused / idle blocks it evicted to fit its tails.
+    # stats() accumulates these (and prefill_bytes_saved) across batches.
+    pool_hit_blocks: int = 0
+    pool_evictions: int = 0
     quant: str = "bf16"                # weight serving format (repro.quant)
     kv_format: str = "bf16"            # KV-cache element format
     weight_bytes: Optional[int] = None       # resident (packed) weight bytes
@@ -433,6 +438,13 @@ class ContinuousBatchingScheduler:
         return cap
 
     def _request_cost(self, req: ServeRequest) -> int:
+        # marginal (post-dedup) pricing: a backend with a resident prefix
+        # pool charges only the tail blocks a request would actually
+        # allocate — its trie-cached prefix is free — so cache-hot requests
+        # admit cheaply and the block budget reflects real memory
+        mrc = getattr(self.backend, "marginal_request_cost", None)
+        if mrc is not None:
+            return mrc(req.prompt, req.max_new_tokens, req.n_samples)
         rc = getattr(self.backend, "request_cost", None)
         if rc is None:
             return req.n_samples
@@ -586,6 +598,8 @@ class ContinuousBatchingScheduler:
             kv_blocks_in_use=getattr(self.backend, "blocks_in_use", None),
             prefill_bytes_saved=float(getattr(handle, "prefill_bytes_saved",
                                               0.0)),
+            pool_hit_blocks=int(getattr(handle, "pool_hit_blocks", 0)),
+            pool_evictions=int(getattr(handle, "pool_evictions", 0)),
             quant=getattr(self.backend, "quant_format", "bf16"),
             kv_format=getattr(self.backend, "kv_format", "bf16"),
             weight_bytes=getattr(self.backend, "weight_bytes", None),
@@ -784,6 +798,12 @@ class ContinuousBatchingScheduler:
             "reroute_boundaries": self.reroute_boundaries,
             "spec_proposed": sum(r.spec_proposed for r in self.records),
             "spec_accepted": sum(r.spec_accepted for r in self.records),
+            # steady-state prefix-pool accounting, accumulated across
+            # batches (per-batch values ride each BatchRecord)
+            "pool_hit_blocks": sum(r.pool_hit_blocks for r in self.records),
+            "pool_evictions": sum(r.pool_evictions for r in self.records),
+            "prefill_bytes_saved": sum(r.prefill_bytes_saved
+                                       for r in self.records),
         }
 
 

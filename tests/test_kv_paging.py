@@ -83,6 +83,29 @@ def test_allocator_double_free_and_exhaustion_raise():
         a.alloc()
 
 
+def test_allocator_free_of_trie_resident_block_raises():
+    """Regression (PrefixPool guard): dropping the *last* reference of a
+    trie-resident block must raise, naming the block and its owning prefix
+    — cached KV silently returning to the free list would corrupt the
+    prefix index. Holder refs above the trie ref still release normally."""
+    a = BlockAllocator(2, 4)
+    b = a.alloc()                       # trie ref (pool insert forks+protects)
+    a.protect(b, "depth 1, chunk tokens [5, 6, 7, 8]...")
+    a.fork(b)                           # one live holder on top
+    assert a.free(b) is False           # holder release: fine, ref 2 -> 1
+    with pytest.raises(RuntimeError) as ei:
+        a.free(b)                       # last ref is the trie's: hard error
+    assert f"block {b}" in str(ei.value)
+    assert "depth 1, chunk tokens [5, 6, 7, 8]" in str(ei.value)
+    assert a.refcount(b) == 1           # nothing was released
+    assert a.blocks_in_use == 1
+    a.unprotect(b)                      # eviction path: unprotect, then free
+    assert a.free(b)
+    assert a.blocks_free == 2
+    with pytest.raises(KeyError, match="unallocated"):
+        a.protect(b, "stale")           # protection requires a live block
+
+
 def _run_lifecycle(n_blocks, bs, requests, early, seed):
     """Drive build_paged_layout + early/final release over `requests`
     (plen, max_new, k) triples; checks the allocator invariants throughout.
