@@ -65,6 +65,21 @@ SPECS: Dict[str, List[Tuple[str, str]]] = {
         ("tight.pool_evictions", "higher"),
         ("tight.pool_hit_blocks", "higher"),
     ],
+    "preemption": [
+        ("acceptance_all", "exact"),
+        ("preempt.completed", "exact"),
+        ("preempt.cancelled", "exact"),
+        ("preempt.preemptions", "exact"),
+        ("preempt.retries_total", "exact"),
+        ("preempt.chaos_applied", "exact"),
+        ("preempt.leaked_blocks", "exact"),
+        ("run_to_completion.completed", "exact"),
+        ("run_to_completion.leaked_blocks", "exact"),
+        ("run_to_completion.chaos_applied", "exact"),
+        ("interactive_p95_ratio", "higher"),
+        ("resume_tail_ratio", "lower"),
+        ("gates", "exact"),
+    ],
     "serving_schedule": [
         ("acceptance_all", "exact"),
         ("scheduler.completed", "exact"),

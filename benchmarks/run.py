@@ -44,6 +44,7 @@ BENCHES = [
     ("quant_serving", "benchmarks.quant_serving", "acceptance_all"),
     ("spec_decode", "benchmarks.spec_decode", "acceptance_all"),
     ("prefix_pool", "benchmarks.prefix_pool", "acceptance_all"),
+    ("preemption", "benchmarks.preemption", "acceptance_all"),
     ("bench_compare", "benchmarks.compare", "self_check_ok"),
 ]
 

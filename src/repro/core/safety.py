@@ -83,6 +83,11 @@ class DriftEvent:
       * ``device_recovered`` — device reintroduced at reduced capacity.
       * ``cpq_saturation``   — resident working set approaching the
         allocator headroom (emitted by the control loop, not the monitor).
+      * ``kv_squeeze``       — KV blocks withheld from serving admission
+        (value = block count; 0 releases). Emitted by the fault-injection
+        harness (`repro.serving.chaos`), consumed by the scheduler.
+      * ``slow_kernel``      — service-time inflation factor (value >= 1;
+        1 restores nominal). Same emitter/consumer as ``kv_squeeze``.
     """
     t_s: float
     device: str

@@ -83,6 +83,24 @@ def main() -> None:
                     help="arch whose reduced config serves as the draft "
                          "model (--spec draft; defaults to --arch reduced; "
                          "must share the target vocab)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="decode-boundary preemption (--router): an "
+                         "interactive arrival may cut a lower-tier "
+                         "in-flight batch; with --kv-pool the victim's "
+                         "blocks park in the trie and resume prefills "
+                         "only the tail")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill (needs --kv-blocks): split "
+                         "prefills into <= N-token slices interleaved "
+                         "with decode steps (bit-identical output)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-tier deadline factor (--router): cancel a "
+                         "queued request once it waits longer than "
+                         "FACTOR x its tier's p99 latency cap")
+    ap.add_argument("--chaos", default=None, metavar="PLAN.json",
+                    help="fault-injection plan (repro.serving.chaos JSON) "
+                         "replayed on the simulated clock through the "
+                         "SafetyMonitor into the live scheduler")
     ap.add_argument("--metrics-out", default=None,
                     help="write a metrics snapshot (JSON + .prom sibling) "
                          "here; with --router, refreshed periodically while "
@@ -199,6 +217,12 @@ def main() -> None:
         raise SystemExit("--kv-int8 requires --kv-blocks (paged cache)")
     if args.kv_pool and args.kv_blocks is None:
         raise SystemExit("--kv-pool requires --kv-blocks (paged cache)")
+    if args.prefill_chunk is not None and args.kv_blocks is None:
+        raise SystemExit("--prefill-chunk requires --kv-blocks (paged "
+                         "cache)")
+    if (args.chaos or args.preempt or args.deadline) and not args.router:
+        raise SystemExit("--chaos/--preempt/--deadline need --router "
+                         "(the continuous-batching scheduler)")
     spec_kwargs = ({"spec_policy": spec_policy, "spec_n": args.spec_n}
                    if spec_policy is not None else {})
     if args.kv_blocks is not None:
@@ -211,6 +235,7 @@ def main() -> None:
                                        kv_format=kv_format, obs=obs,
                                        kv_pool=args.kv_pool,
                                        pool_evict=args.pool_evict,
+                                       prefill_chunk=args.prefill_chunk,
                                        **spec_kwargs)
             print(f"[kv] paged cache: {args.kv_blocks} blocks x "
                   f"{args.kv_block_size} slots ({kv_format}, "
@@ -218,7 +243,13 @@ def main() -> None:
             if args.kv_pool:
                 print(f"[kv] resident prefix pool: cross-batch block "
                       f"reuse, evict={args.pool_evict}")
+            if args.prefill_chunk:
+                print(f"[kv] chunked prefill: <= {args.prefill_chunk} "
+                      "tokens per slice, interleaved with decode")
         else:
+            if args.prefill_chunk:
+                raise SystemExit("--prefill-chunk requires a "
+                                 "paging-supported arch")
             print(f"[kv] arch {cfg.name!r} unsupported for paging; "
                   "dense cache")
     if backend is None and spec_policy is not None:
@@ -240,8 +271,17 @@ def main() -> None:
         sched = ContinuousBatchingScheduler(
             engine.backend, router,
             SchedulerConfig(max_batch_requests=args.max_batch,
-                            max_new_tokens=args.max_new), obs=obs,
+                            max_new_tokens=args.max_new,
+                            preempt=args.preempt,
+                            deadline_factor=args.deadline), obs=obs,
             spec_planner=spec_planner)
+        chaos = None
+        if args.chaos:
+            from repro.serving.chaos import FaultPlan, attach
+            plan_doc = FaultPlan.load(args.chaos)
+            chaos = attach(plan_doc, safety, sched)
+            print(f"[chaos] plan seed={plan_doc.seed}: "
+                  f"{len(plan_doc.actions)} actions")
         tiers = (["interactive", "standard", "economy"] if args.mixed
                  else [args.tier])
         ids = []
@@ -253,18 +293,32 @@ def main() -> None:
                 ids.append(adm.request_id)
             else:
                 print(f"[admission] rejected request {i}: {adm.reason}")
-        if args.metrics_out and obs.metrics.enabled:
-            # drain explicitly so the reporter can snapshot on the
-            # scheduler's simulated clock between steps
-            reporter = PeriodicReporter(obs.metrics, args.metrics_out,
-                                        interval_s=args.metrics_interval)
+        if chaos is not None or (args.metrics_out and obs.metrics.enabled):
+            # drain explicitly so the chaos plan fires on the simulated
+            # clock / the reporter snapshots between steps
+            reporter = (PeriodicReporter(obs.metrics, args.metrics_out,
+                                         interval_s=args.metrics_interval)
+                        if args.metrics_out and obs.metrics.enabled
+                        else None)
             while sched.queue.pending or sched.inflight:
+                if chaos is not None:
+                    for act in chaos.apply_due(sched.clock):
+                        print(f"[chaos] t={act.t_s:.2f}s {act.kind} "
+                              f"{act.device or ''}".rstrip())
                 if not sched.step():
                     break
-                reporter.maybe_write(sched.clock)
+                if reporter is not None:
+                    reporter.maybe_write(sched.clock)
             done = sched.completed
         else:
             done = sched.run_until_idle()
+        st = sched.stats()
+        if st["preemptions_total"] or st["cancelled"]:
+            print(f"[robustness] preemptions={st['preemptions']} "
+                  f"deadline_misses={st['deadline_misses']} "
+                  f"retries={st['retries_total']} shed={st['shed_total']} "
+                  f"resume_tail/full={st['resume_tail_tokens']}/"
+                  f"{st['resume_full_tokens']} tokens")
         for rec in sched.records:
             spec = ""
             if rec.spec_n:
@@ -291,7 +345,8 @@ def main() -> None:
                   f"{st['prefill_bytes_saved'] / 1e3:.1f} kB prefill "
                   f"saved; {resident} blocks resident "
                   f"({cached / 1e3:.1f} kB cached)")
-        results = [done[i].result for i in ids]
+        # lifecycle policies may cancel (deadline/shed); report completions
+        results = [done[i].result for i in ids if i in done]
     else:
         results = engine.generate(prompts, n_samples=args.samples,
                                   extras=extras)

@@ -35,9 +35,14 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Union
 
-#: canonical span names in lifecycle order (docs + lifecycle checker)
+#: canonical span names in lifecycle order (docs + lifecycle checker).
+#: preempt/resume/cancel are the robustness detours: a preempted request
+#: re-queues (original arrival kept) and later emits a resume point span
+#: when its history re-enters service; cancel ends a request without a
+#: release (deadline miss, load shed, retry budget exhausted).
 LIFECYCLE = ("admit", "queue", "schedule", "prefill", "decode",
-             "verify", "early_stop", "release")
+             "verify", "early_stop", "preempt", "resume", "cancel",
+             "release")
 
 
 @dataclass

@@ -133,6 +133,12 @@ class ControlLoop:
         safety.subscribe(self._on_drift)
         if hasattr(orchestrator, "on_drift"):
             safety.subscribe(orchestrator.on_drift)
+        # the scheduler consumes the raw event stream too: a device failure
+        # must preempt its in-flight batches NOW (the re-anneal below only
+        # redirects future formations), and the chaos-harness kinds
+        # (kv_squeeze / slow_kernel) adjust its admission/pricing state
+        if scheduler is not None and hasattr(scheduler, "on_drift"):
+            safety.subscribe(scheduler.on_drift)
 
     # ------------------------------------------------------------ plumbing
     def _on_drift(self, event: DriftEvent) -> None:

@@ -1,18 +1,21 @@
 from repro.serving.backend import (BlockAllocator, ExecutionBackend,
                                    GenerationResult, InFlightBatch,
-                                   PagedBatchLayout, bucket_key,
-                                   build_paged_layout)
+                                   PagedBatchLayout, PendingPrefill,
+                                   bucket_key, build_paged_layout)
+from repro.serving.chaos import ChaosDriver, FaultAction, FaultPlan
 from repro.serving.engine import ServingEngine
 from repro.serving.prefix_pool import PrefixPool
 from repro.serving.scheduler import (AdmissionResult, BatchRecord,
                                      CompletedRequest,
                                      ContinuousBatchingScheduler,
-                                     RequestQueue, SchedulerConfig,
-                                     ServeRequest)
+                                     RequestQueue, ResumeState,
+                                     SchedulerConfig, ServeRequest,
+                                     tier_priority)
 
 __all__ = ["ServingEngine", "GenerationResult", "ExecutionBackend",
            "InFlightBatch", "bucket_key", "ContinuousBatchingScheduler",
            "RequestQueue", "SchedulerConfig", "ServeRequest",
            "AdmissionResult", "BatchRecord", "CompletedRequest",
            "BlockAllocator", "PagedBatchLayout", "build_paged_layout",
-           "PrefixPool"]
+           "PrefixPool", "PendingPrefill", "ResumeState", "tier_priority",
+           "ChaosDriver", "FaultAction", "FaultPlan"]

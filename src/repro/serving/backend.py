@@ -367,6 +367,25 @@ class SpecState:
 
 
 @dataclass
+class PendingPrefill:
+    """Chunked-prefill work of a batch that has its blocks but not yet its
+    KV: ``jobs`` are (prompt idxs, start, end) token slices, drained one per
+    ``decode_step`` call; the finish pass (CoW fan-out, pool indexing,
+    first-token sampling) runs when the last job lands. The handle's
+    ``step`` stays 0 throughout, so the scheduler never retires it early,
+    and a preemption mid-prefill releases instead of parking (no block is
+    guaranteed filled yet)."""
+    jobs: Deque[Tuple[List[int], int, int]]
+    base: np.ndarray                   # (R, L[,K]) stacked unique prompts
+    extras: Dict[str, jax.Array]       # per-prompt rows (untiled)
+    last_rows: List[Any]               # final-position logits per prompt
+    rep: Union[int, np.ndarray]
+    mc: bool
+    full_prefix: int                   # blocks to trie-index at finish
+    n_spec: int = 0                    # draft depth armed for this batch
+
+
+@dataclass
 class InFlightBatch:
     """One prefilled batch mid-decode: the unit the scheduler interleaves."""
     prompts: List[np.ndarray]
@@ -377,7 +396,8 @@ class InFlightBatch:
     rng: jax.Array                     # stream state: split once per token
     extras: Dict[str, jax.Array]       # already tiled to sequence count
     cache: Any
-    tok: jax.Array                     # last sampled token (B,) or (B, K)
+    tok: Optional[jax.Array]           # last sampled token (B,) or (B, K);
+    #                                    None while chunk-prefilling
     step: int                          # tokens sampled so far (>= 1)
     out_toks: List[np.ndarray] = field(default_factory=list)
     out_lps: List[np.ndarray] = field(default_factory=list)
@@ -391,6 +411,7 @@ class InFlightBatch:
     pool_evictions: int = 0            # idle blocks evicted to fit the tail
     freed_seqs: Set[int] = field(default_factory=set)   # early-released rows
     spec: Optional[SpecState] = None   # set when this batch drafts (n > 0)
+    pending_prefill: Optional[PendingPrefill] = None
 
     @property
     def n_sequences(self) -> int:
@@ -424,7 +445,8 @@ class ExecutionBackend:
                  kv_blocks: Optional[int] = None, kv_block_size: int = 16,
                  kv_format: str = "bf16", obs=None,
                  spec_policy=None, spec_n: int = 0,
-                 kv_pool: bool = False, pool_evict: str = "lru"):
+                 kv_pool: bool = False, pool_evict: str = "lru",
+                 prefill_chunk: Optional[int] = None):
         self.model = model
         self.params = params
         self.eos_token = eos_token
@@ -475,6 +497,21 @@ class ExecutionBackend:
         elif kv_pool:
             raise ValueError("kv_pool requires the paged cache (set "
                              "kv_blocks)")
+        # chunked prefill: split every prefill into <= prefill_chunk-token
+        # slices, one slice per decode_step call, so a long prompt
+        # interleaves with in-flight decode instead of stalling it. Rides
+        # the tail-prefill kernel (explicit positions + block tables), so
+        # paged mode only — and bit-identical to the one-shot prefill: the
+        # kernel masks unwritten positions, so per-position attention sums
+        # are over the same terms regardless of chunk boundaries.
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1 "
+                                 f"(got {prefill_chunk})")
+            if self.allocator is None:
+                raise ValueError("prefill_chunk requires the paged cache "
+                                 "(set kv_blocks)")
+        self.prefill_chunk = prefill_chunk
         # live handles: release() must be called exactly once per started
         # batch — a second release raises instead of silently driving the
         # budget negative (the double-release regression).
@@ -883,6 +920,12 @@ class ExecutionBackend:
             h = self._start_batch_dense(prompts, repeats, rep, base, B, plen,
                                         max_new, temperature, rng, extras, mc)
             prefilled = B * plen
+        if h.pending_prefill is not None:
+            # chunked: nothing forwarded yet — each chunk step meters its
+            # own tokens and spans; the draft depth arms at finish
+            h.pending_prefill.n_spec = n_spec
+            n_spec = 0
+            prefilled = 0
         if n_spec > 0:
             first = np.asarray(h.tok).ravel()
             lp0 = np.asarray(h.out_lps[0]).ravel()
@@ -905,7 +948,8 @@ class ExecutionBackend:
                         prefill_tokens=prefilled, n_sequences=B, plen=plen)
         if self._m is not None:
             self._m["tokens_in"].inc(prefilled)
-            self._m["tokens_out"].inc(B)        # first token per sequence
+            if h.pending_prefill is None:       # else metered at finish
+                self._m["tokens_out"].inc(B)    # first token per sequence
             if self.prefix_pool is not None and h.paged is not None:
                 lookupable = len(prompts) * (plen // self.allocator.block_size)
                 misses = lookupable - h.pool_hit_blocks
@@ -974,6 +1018,28 @@ class ExecutionBackend:
             prefill_extras = {k: jnp.asarray(v) for k, v in extras.items()}
             decode_extras = {k: jnp.repeat(jnp.asarray(v), rep, axis=0)
                              for k, v in extras.items()}
+            if self.prefill_chunk is not None:
+                # chunked: the fresh paged cache masks every position, so
+                # slice-at-a-time tail prefills are safe; CoW fan-out and
+                # first-token sampling run at finish
+                jobs: Deque[Tuple[List[int], int, int]] = deque()
+                s = 0
+                while s < plen:
+                    e = min(s + self.prefill_chunk, plen)
+                    jobs.append((list(range(R)), s, e))
+                    s = e
+                return InFlightBatch(
+                    prompts=list(prompts), repeats=repeats, plen=plen,
+                    max_new=max_new, temperature=temperature, rng=rng,
+                    extras=decode_extras, cache=cache, tok=None, step=0,
+                    paged=layout,
+                    block_table=jnp.asarray(layout.decode_table),
+                    prefill_bytes_saved=float((B - R) * plen
+                                              * self.kv_token_bytes),
+                    pending_prefill=PendingPrefill(
+                        jobs=jobs, base=base, extras=prefill_extras,
+                        last_rows=[None] * R, rep=rep, mc=mc,
+                        full_prefix=0))
             has_cow = layout.copy_src.size > 0
             last_logits, cache = self._prefill_jit(
                 self.params, jnp.asarray(base), cache, prefill_extras,
@@ -1076,6 +1142,34 @@ class ExecutionBackend:
             groups: Dict[int, List[int]] = {}
             for i, c in enumerate(layout.hit_counts):
                 groups.setdefault(c, []).append(i)
+            if self.prefill_chunk is not None:
+                # chunked: enqueue the tail slices instead of forwarding —
+                # decode_step drains one per call; CoW fan-out, trie
+                # indexing and first-token sampling run at finish
+                jobs: Deque[Tuple[List[int], int, int]] = deque()
+                for c, idxs in sorted(groups.items()):
+                    s = c * bs
+                    while s < plen:
+                        e = min(s + self.prefill_chunk, plen)
+                        jobs.append((idxs, s, e))
+                        s = e
+                self._pool_cache = cache
+                tail_tokens = sum(plen - c * bs
+                                  for c in layout.hit_counts)
+                return InFlightBatch(
+                    prompts=list(prompts), repeats=repeats, plen=plen,
+                    max_new=max_new, temperature=temperature, rng=rng,
+                    extras=decode_extras, cache=None, tok=None, step=0,
+                    paged=layout,
+                    block_table=jnp.asarray(layout.decode_table),
+                    prefill_bytes_saved=float((B * plen - tail_tokens)
+                                              * self.kv_token_bytes),
+                    pool_hit_blocks=sum(layout.hit_counts),
+                    pool_evictions=evicted,
+                    pending_prefill=PendingPrefill(
+                        jobs=jobs, base=base, extras=prefill_extras,
+                        last_rows=[None] * R, rep=rep, mc=mc,
+                        full_prefix=full_prefix))
             last_rows: List[Any] = [None] * R
             for c, idxs in sorted(groups.items()):
                 gl, cache = self._tail_prefill_jit(
@@ -1133,10 +1227,136 @@ class ExecutionBackend:
                                       * self.kv_token_bytes),
             pool_hit_blocks=hit_blocks, pool_evictions=evicted)
 
+    def _prefill_chunk_step(self, h: InFlightBatch) -> None:
+        """Run ONE pending prefill slice (the chunked-prefill unit a
+        ``decode_step`` call spends instead of a token)."""
+        pp = h.pending_prefill
+        idxs, s, e = pp.jobs.popleft()
+        tracer = self.obs.tracer
+        t0 = time.perf_counter() if tracer.enabled else 0.0
+        pooled = h.cache is None
+        cache = self._pool_cache if pooled else h.cache
+        gl, cache = self._tail_prefill_jit(
+            self.params, jnp.asarray(pp.base[idxs][:, s:e]),
+            jnp.asarray(s, jnp.int32), cache,
+            {k: v[jnp.asarray(idxs)] for k, v in pp.extras.items()},
+            jnp.asarray(h.paged.prefill_table[idxs]), kv_len=h.plen)
+        if pooled:
+            self._pool_cache = cache
+        else:
+            h.cache = cache
+        if e == h.plen:
+            for j, i in enumerate(idxs):
+                pp.last_rows[i] = gl[j]
+        if tracer.enabled:
+            tracer.emit("prefill", t0, time.perf_counter(), clock="wall",
+                        prefill_tokens=len(idxs) * (e - s),
+                        n_sequences=h.n_sequences, plen=h.plen,
+                        chunk=[s, e])
+        if self._m is not None:
+            self._m["tokens_in"].inc(len(idxs) * (e - s))
+        if not pp.jobs:
+            self._finish_chunked_prefill(h)
+
+    def _finish_chunked_prefill(self, h: InFlightBatch) -> None:
+        """Last chunk landed: CoW-fan-out the shared partial block, index
+        the now-filled full-prefix chains (pooled mode), sample the first
+        token with the exact split sequence of the one-shot path (bit
+        parity), and arm the draft state if a depth was noted."""
+        pp = h.pending_prefill
+        layout = h.paged
+        pooled = h.cache is None
+        cache = self._pool_cache if pooled else h.cache
+        if layout.copy_src.size > 0:
+            cache = self._copy_blocks_jit(cache,
+                                          jnp.asarray(layout.copy_src),
+                                          jnp.asarray(layout.copy_dst))
+        if pooled:
+            self._pool_cache = cache
+            for i, p in enumerate(h.prompts):
+                self.prefix_pool.insert(
+                    p, [int(g) for g in
+                        layout.prefill_table[i][:pp.full_prefix]])
+        else:
+            h.cache = cache
+        last_logits = jnp.stack(pp.last_rows, axis=0)
+        h.rng, sub = jax.random.split(h.rng)
+        lf = jnp.repeat(last_logits.astype(jnp.float32), pp.rep, axis=0)
+        logp0 = jax.nn.log_softmax(lf, axis=-1)
+        if h.temperature > 0:
+            tok = jax.random.categorical(sub, lf / h.temperature, axis=-1)
+        else:
+            tok = jnp.argmax(lf, axis=-1)
+        lp = jnp.take_along_axis(logp0, tok[..., None], axis=-1)[..., 0]
+        h.tok = tok
+        h.step = 1
+        h.out_toks = [np.asarray(tok)]
+        h.out_lps = [np.asarray(lp if not pp.mc else lp.mean(-1))]
+        if pp.n_spec > 0:
+            first = np.asarray(h.tok).ravel()
+            lp0 = np.asarray(h.out_lps[0]).ravel()
+            hists: List[np.ndarray] = []
+            for prompt, k in zip(h.prompts, h.repeats):
+                p = np.asarray(prompt, np.int64).ravel()
+                for _ in range(k):
+                    i = len(hists)
+                    hists.append(np.concatenate([p, first[i:i + 1]]))
+            h.spec = SpecState(
+                policy=self.spec_policy, n=pp.n_spec,
+                committed=np.ones(h.n_sequences, np.int64),
+                histories=hists,
+                toks=[[int(t)] for t in first],
+                lps=[[float(x)] for x in lp0])
+        if self._m is not None:
+            self._m["tokens_out"].inc(h.n_sequences)
+        h.pending_prefill = None
+
+    def park_batch(self, h: InFlightBatch,
+                   histories: Sequence[np.ndarray]) -> int:
+        """Preemption handoff: index the victim's *filled* full blocks in
+        the resident prefix pool before releasing the batch, so resuming it
+        is a trie hit that prefills only the post-preemption tail.
+
+        ``histories[i]`` is sequence row *i*'s token history (prompt +
+        committed tokens). After ``step`` sampled tokens the KV holds
+        written positions through ``plen + step - 2`` (the newest token is
+        sampled, not yet scattered), so exactly ``(len(history) - 1) //
+        block_size`` leading blocks of the row's table are full and
+        correct — on a speculative batch that bound also keeps any stale
+        rejected-draft writes (which live past the committed frontier) out
+        of the trie. Returns parked blocks; degrades to a plain release
+        when there is no resident pool to park into, or mid-chunked-prefill
+        (no block is guaranteed filled)."""
+        pool = self.prefix_pool
+        if pool is None or h.paged is None or h.pending_prefill is not None:
+            self.release(h)
+            return 0
+        if len(histories) != h.n_sequences:
+            raise ValueError(
+                f"park_batch needs one history per sequence row "
+                f"({h.n_sequences}), got {len(histories)}")
+        bs = self.allocator.block_size
+        parked = 0
+        for i, hist in enumerate(histories):
+            if i in h.freed_seqs:
+                continue
+            hist = np.asarray(hist)
+            filled = (len(hist) - 1) // bs
+            if filled <= 0:
+                continue
+            row = [int(g) for g in h.paged.decode_table[i][:filled]]
+            pool.insert(hist, row)
+            parked += filled
+        self.release(h)
+        return parked
+
     def decode_step(self, h: InFlightBatch) -> bool:
         """Advance one token (or one draft/verify round on a speculative
         batch); returns True while the batch still has decode steps left
         (so ``while backend.decode_step(h): pass`` drains it)."""
+        if h.pending_prefill is not None:
+            self._prefill_chunk_step(h)
+            return True
         if h.spec is not None:
             return self._spec_decode_step(h)
         if h.done:

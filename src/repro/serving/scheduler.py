@@ -32,7 +32,27 @@ batch retirement.
 Routing happens only at batch *formation*: a drift-triggered re-anneal
 (`ControlLoop` calls ``on_reorchestrate``) therefore takes effect at the
 next batch boundary — in-flight batches finish on the plan they were priced
-against.
+against, *unless* the drift is a device failure: ``on_drift`` (subscribed
+to the `SafetyMonitor` event bus) preempts every in-flight batch whose
+routed assignment includes the failed device and re-queues its requests
+with retry backoff, so nothing runs to completion against a dead placement.
+
+Preemption (``SchedulerConfig.preempt``)
+----------------------------------------
+``preempt(entry)`` snapshots a victim batch at a decode-step boundary: each
+member request's generated tokens/logprobs become a `ResumeState` (its
+per-sample histories are the new effective prompts), the backend parks the
+victim's filled KV blocks in the resident `PrefixPool` (``park_batch`` —
+resume is then a trie hit that prefills only the post-preemption tail) or
+releases them, and the requests return to the queue head with their
+original ``arrival_s``/``seq`` (queue delay stays total wall time).
+Victim selection is by tier scalarization — a waiting request whose tier's
+``latency_weight`` outranks every member of the simulated-pipeline tail
+entry may cut it — bounded by a per-request preemption cap and an optional
+age bound so economy work cannot starve. Lifecycle policies ride the same
+machinery: per-tier deadlines cancel overdue queued requests, device-fault
+evictions retry with exponential backoff, and queue-depth / KV-watermark
+load shedding drops the oldest lowest-priority work first.
 
 Simulated time: placement is the orchestrator's simulated stage->device
 plan, so service time is simulated too (execution itself runs on whatever
@@ -64,6 +84,30 @@ from repro.serving.backend import bucket_key as _default_bucket_key
 _MISSING = object()    # getattr sentinel: absent attr vs attr that is None
 
 
+def tier_priority(tier) -> float:
+    """Scalarized service priority of a request class: its latency weight
+    (interactive = 1.0 outranks economy = 0.0). Used for preemption victim
+    selection and load-shedding order — economy before interactive."""
+    return float(getattr(tier, "latency_weight", 0.0))
+
+
+@dataclass
+class ResumeState:
+    """Decode-boundary snapshot of a preempted request.
+
+    ``prompts[i]`` is sample *i*'s full token history (original prompt +
+    every committed token) — the effective prompt a resumed run prefills;
+    with the resident prefix pool the parked chain makes that prefill a
+    trie hit on everything but the tail. ``toks``/``lps`` are the committed
+    decode tokens and their logprobs, merged back into the final
+    `GenerationResult` at retirement. Speculative victims are trimmed to
+    the request's minimum committed count so the resumed bucket stays
+    rectangular (greedy regenerates the trimmed tail identically)."""
+    prompts: List[np.ndarray]          # per-sample history, equal lengths
+    toks: List[np.ndarray]             # committed tokens per sample
+    lps: List[np.ndarray]              # committed logprobs per sample
+
+
 @dataclass
 class ServeRequest:
     id: int
@@ -76,10 +120,29 @@ class ServeRequest:
     extras: Optional[Dict[str, np.ndarray]] = None   # per-request rows
     arrival_s: float = 0.0
     seq: int = 0                       # admission order (FIFO key)
+    deadline_s: Optional[float] = None     # sim-clock completion deadline
+    resume: Optional[ResumeState] = None   # set while preempted/resumed
+    preemptions: int = 0               # times evicted mid-decode
+    retries: int = 0                   # fault-eviction retry count
+    not_before_s: float = 0.0          # retry backoff: earliest re-service
 
     @property
     def tier_name(self) -> str:
         return self.tier.name
+
+    @property
+    def effective_prompt(self) -> np.ndarray:
+        """The prompt a (re)formed batch actually prefills: the original
+        prompt, or the preemption snapshot's per-sample history."""
+        return self.prompt if self.resume is None else self.resume.prompts[0]
+
+    @property
+    def emitted_tokens(self) -> int:
+        return 0 if self.resume is None else len(self.resume.toks[0])
+
+    @property
+    def remaining_new(self) -> int:
+        return self.max_new_tokens - self.emitted_tokens
 
 
 @dataclass
@@ -101,6 +164,22 @@ class SchedulerConfig:
     temperature: float = 0.8
     seed: int = 0                      # batch rng stream (multi-request)
     respect_caps: bool = True          # shrink batches to keep caps feasible
+    # --- decode-boundary preemption (off by default: legacy run-to-
+    # completion scheduling is the baseline every earlier bench pins) ---
+    preempt: bool = False              # tier-priority pipeline-tail cutting
+    preempt_min_gain_s: float = 0.0    # only cut when the projected wait
+    #                                    behind the tail exceeds this
+    preempt_max_per_request: int = 4   # no-starvation cap per victim
+    preempt_age_bound_s: Optional[float] = None  # victims older than this
+    #                                    (sim wait) are preemption-exempt
+    # --- request lifecycle policies ---
+    deadline_factor: Optional[float] = None   # deadline = arrival +
+    #                                    factor * tier.latency_p99_s
+    retry_backoff_s: float = 0.05      # fault-eviction backoff base (2^k)
+    max_retries: int = 3               # fault retries before the request
+    #                                    is cancelled as failed
+    shed_queue_depth: Optional[int] = None    # total-queued shed watermark
+    shed_kv_free_frac: Optional[float] = None  # KV free-fraction watermark
 
 
 @dataclass(eq=False)
@@ -138,6 +217,18 @@ class BatchRecord:
     spec_accept_rate: Optional[float] = None   # planned -> measured
     spec_proposed: int = 0             # draft tokens offered to verify
     spec_accepted: int = 0             # draft tokens verify accepted
+    # preemption: set when this batch was cut at a decode boundary instead
+    # of retiring (reason: tier | fault | shed); the pipeline clock rolls
+    # back to the preemption instant, so latency_s overstates what ran
+    preempted: Optional[str] = None
+    preempted_t_s: Optional[float] = None
+    # resume accounting: requests in this batch re-admitted after a
+    # preemption, and their history prefill split (full = what a pool-less
+    # re-prefill would move, tail = what was actually prefilled after
+    # parked-chain trie hits)
+    resume_requests: int = 0
+    resume_full_tokens: int = 0
+    resume_tail_tokens: int = 0
     # per-member accounting on the simulated clock: queue_delay_s above is
     # the max over members; p95 queue delay needs every member's own wait
     request_entries: List[Dict[str, Any]] = field(default_factory=list)
@@ -162,10 +253,14 @@ class RequestQueue:
     """
 
     def __init__(self, router=None, max_queue_depth: Optional[int] = 256,
-                 bucket_key=None, obs=None):
+                 bucket_key=None, obs=None,
+                 deadline_factor: Optional[float] = None):
         self.router = router
         self.max_queue_depth = max_queue_depth
         self.bucket_key = bucket_key or _default_bucket_key
+        # per-tier deadline: arrival + factor * tier.latency_p99_s (tiers
+        # without a latency cap are deadline-exempt)
+        self.deadline_factor = deadline_factor
         self.obs = obs if obs is not None else NULL_OBS
         self._buckets: Dict[Tuple, Deque[ServeRequest]] = {}
         self._depth: Dict[str, int] = {}
@@ -245,15 +340,19 @@ class RequestQueue:
                     f"admission cost {c} (n_samples={n_samples}) exceeds "
                     f"the KV budget ({budget})", "kv_budget", arrival_s,
                     name)
+        deadline = None
+        if self.deadline_factor is not None:
+            cap = getattr(tier, "latency_p99_s", None)
+            if cap is not None:
+                deadline = arrival_s + self.deadline_factor * cap
         req = ServeRequest(self._next_id, prompt, tier, n_samples,
                            max_new_tokens, temperature, rng=rng,
                            extras=extras, arrival_s=arrival_s,
-                           seq=self._seq)
+                           seq=self._seq, deadline_s=deadline)
         self._next_id += 1
         self._seq += 1
         self._depth[name] = self._depth.get(name, 0) + 1
-        key = self.bucket_key(prompt, max_new_tokens, temperature)
-        self._buckets.setdefault(key, deque()).append(req)
+        self._buckets.setdefault(self._key(req), deque()).append(req)
         if self._m is not None:
             self._m["admissions"].inc(outcome="admitted", reason="ok")
             self._note_depth(name)
@@ -276,22 +375,55 @@ class RequestQueue:
     def depth(self, tier_name: str) -> int:
         return self._depth.get(tier_name, 0)
 
-    def _oldest_bucket(self) -> Optional[Tuple]:
-        live = {k: q for k, q in self._buckets.items() if q}
+    def _key(self, req: ServeRequest) -> Tuple:
+        """A request's current bucket: the *effective* prompt length and
+        remaining decode horizon — a resumed request lives in the bucket of
+        its history, not its original shape."""
+        return self.bucket_key(req.effective_prompt, req.remaining_new,
+                               req.temperature)
+
+    def _oldest_bucket(self, now: Optional[float] = None) -> Optional[Tuple]:
+        live = {k: q for k, q in self._buckets.items()
+                if q and (now is None or q[0].not_before_s <= now)}
         if not live:
             return None
         return min(live, key=lambda k: live[k][0].seq)
 
+    def peek_ready(self, now: Optional[float] = None
+                   ) -> Optional[ServeRequest]:
+        """Highest-priority serviceable bucket head (ties: oldest), or None.
+        Priority is the tier's latency-weight scalarization — the same key
+        preemption victim selection uses."""
+        heads = [q[0] for q in self._buckets.values()
+                 if q and (now is None or q[0].not_before_s <= now)]
+        if not heads:
+            return None
+        return max(heads, key=lambda r: (tier_priority(r.tier), -r.seq))
+
+    def earliest_not_before(self) -> Optional[float]:
+        """Soonest retry-backoff release among queued requests (idle-clock
+        target when everything pending is backoff-blocked)."""
+        ts = [r.not_before_s for q in self._buckets.values() for r in q
+              if r.not_before_s > 0.0]
+        return min(ts) if ts else None
+
     # ----------------------------------------------------------- batching
     def pop_batch(self, max_requests: int,
                   budget: Optional[int] = None,
-                  cost=None) -> List[ServeRequest]:
+                  cost=None, now: Optional[float] = None,
+                  bucket: Optional[Tuple] = None) -> List[ServeRequest]:
         """Pop the next batch: oldest bucket first, FIFO within it (which is
         FIFO within every tier), bounded by request count and the backend's
         free KV budget — ``cost(req)`` prices each member (default: its
         sample count, the dense slot cost; a paged backend prices blocks at
-        shared-prefix cost). Never mixes buckets."""
-        key = self._oldest_bucket()
+        shared-prefix cost). Never mixes buckets. ``now`` respects retry
+        backoff (a head whose ``not_before_s`` is in the future blocks its
+        bucket, preserving FIFO); ``bucket`` targets a specific bucket (the
+        preemption path forms the preempting tier's batch first)."""
+        if bucket is not None and self._buckets.get(bucket):
+            key: Optional[Tuple] = bucket
+        else:
+            key = self._oldest_bucket(now)
         if key is None:
             return []
         q = self._buckets[key]
@@ -299,6 +431,8 @@ class RequestQueue:
         used = 0
         while q and len(out) < max_requests:
             head = q[0]
+            if now is not None and head.not_before_s > now:
+                break      # backoff: FIFO within the bucket is preserved
             c = cost(head) if cost is not None else head.n_samples
             if budget is not None and used + c > budget:
                 break      # head waits for budget to free (retiring batches)
@@ -310,13 +444,52 @@ class RequestQueue:
 
     def push_front(self, requests: Sequence[ServeRequest]) -> None:
         """Return popped requests to the head of their bucket, order
-        preserved (cap-aware batch shrinking)."""
+        preserved (cap-aware batch shrinking, preemption re-admission).
+        Requests keep their original ``arrival_s``/``seq``, so FIFO age,
+        deadline math and queue-delay accounting reflect total wall time —
+        never time-since-requeue."""
         for req in reversed(list(requests)):
-            key = self.bucket_key(req.prompt, req.max_new_tokens,
-                                  req.temperature)
-            self._buckets.setdefault(key, deque()).appendleft(req)
+            self._buckets.setdefault(self._key(req), deque()).appendleft(req)
             self._depth[req.tier_name] = self._depth.get(req.tier_name, 0) + 1
             self._note_depth(req.tier_name)
+
+    def expire(self, now: float) -> List[ServeRequest]:
+        """Remove and return every queued request whose deadline has passed
+        (the scheduler cancels them — they hold no KV, so nothing leaks)."""
+        out: List[ServeRequest] = []
+        for key, q in list(self._buckets.items()):
+            if not any(r.deadline_s is not None and now > r.deadline_s
+                       for r in q):
+                continue
+            keep: Deque[ServeRequest] = deque()
+            for r in q:
+                if r.deadline_s is not None and now > r.deadline_s:
+                    out.append(r)
+                    self._depth[r.tier_name] -= 1
+                    self._note_depth(r.tier_name)
+                else:
+                    keep.append(r)
+            self._buckets[key] = keep
+        return out
+
+    def shed_oldest(self, priority_of=None) -> Optional[ServeRequest]:
+        """Remove and return the oldest request of the lowest-priority tier
+        present (load shedding: oldest-economy-first)."""
+        priority_of = priority_of or tier_priority
+        victim: Optional[ServeRequest] = None
+        vkey: Optional[Tuple] = None
+        for key, q in self._buckets.items():
+            for r in q:
+                if victim is None or \
+                        (priority_of(r.tier), r.seq) < \
+                        (priority_of(victim.tier), victim.seq):
+                    victim, vkey = r, key
+        if victim is None:
+            return None
+        self._buckets[vkey].remove(victim)
+        self._depth[victim.tier_name] -= 1
+        self._note_depth(victim.tier_name)
+        return victim
 
 
 @dataclass(eq=False)
@@ -405,6 +578,26 @@ class ContinuousBatchingScheduler:
                 "inflight": reg.gauge(
                     "serving_inflight_batches",
                     "Batches mid-decode right now"),
+                "preempt": reg.counter(
+                    "serving_preemptions_total",
+                    "In-flight batches cut at a decode boundary, by cause",
+                    labelnames=("reason",)),
+                "deadline_miss": reg.counter(
+                    "serving_deadline_miss_total",
+                    "Queued requests cancelled past their tier deadline",
+                    labelnames=("tier",)),
+                "retries": reg.counter(
+                    "serving_retries_total",
+                    "Fault-evicted requests re-queued with backoff",
+                    labelnames=("tier",)),
+                "shed": reg.counter(
+                    "serving_load_shed_total",
+                    "Queued requests dropped at a shed watermark",
+                    labelnames=("tier",)),
+                "resume_saved": reg.counter(
+                    "serving_resume_prefill_bytes_saved_total",
+                    "Resume-prefill KV bytes served from parked "
+                    "prefix-pool chains instead of re-prefilled"),
             }
         # per-tier running totals behind the IPW attribution gauge
         self._tier_energy: Dict[str, float] = {}
@@ -416,11 +609,29 @@ class ContinuousBatchingScheduler:
         # reading them (the RoutedServingEngine shim does) — a long-lived
         # server must not retain every GenerationResult forever
         self.completed: Dict[int, CompletedRequest] = {}
+        # requests removed without a result: deadline misses, shed load,
+        # retry-budget exhaustion — keyed by id, with the cancel reason
+        self.cancelled: Dict[int, Tuple[ServeRequest, str]] = {}
         self.records: Deque[BatchRecord] = deque(maxlen=1024)
         self.reroute_boundaries = 0    # ControlLoop re-anneal notifications
         self._reroute_pending = False
         self._batch_id = 0
         self._base_rng = None          # lazily: jax import only when needed
+        # the lifecycle policies' own ledgers (metrics may be disabled)
+        self.preemptions: Dict[str, int] = {}      # reason -> count
+        self.deadline_misses = 0
+        self.retries_total = 0
+        self.shed_total = 0
+        self.resume_full_tokens = 0    # re-prefill tokens a pool-less
+        self.resume_tail_tokens = 0    # resume would have moved vs moved
+        # fault state pushed in over the DriftEvent bus (chaos harness /
+        # SafetyMonitor): failed devices, KV squeeze, kernel slowdown
+        self._failed_devices: set = set()
+        self.kv_reserve = 0            # blocks withheld from admission
+        self.latency_inflation = 1.0   # slow-kernel service-time factor
+        if config.deadline_factor is not None and \
+                self.queue.deadline_factor is None:
+            self.queue.deadline_factor = config.deadline_factor
 
     # ----------------------------------------------------------- admission
     def _capacity_free(self) -> Optional[int]:
@@ -429,6 +640,8 @@ class ContinuousBatchingScheduler:
         cap = getattr(self.backend, "capacity_free", _MISSING)
         if cap is _MISSING:
             cap = self.backend.slots_free
+        if cap is not None and self.kv_reserve:
+            cap = max(0, cap - self.kv_reserve)
         return cap
 
     def _capacity_total(self) -> Optional[int]:
@@ -441,13 +654,21 @@ class ContinuousBatchingScheduler:
         # marginal (post-dedup) pricing: a backend with a resident prefix
         # pool charges only the tail blocks a request would actually
         # allocate — its trie-cached prefix is free — so cache-hot requests
-        # admit cheaply and the block budget reflects real memory
+        # admit cheaply and the block budget reflects real memory. A
+        # resumed request prices each sample's own history (divergent after
+        # the original prompt); its parked chains make those near-free.
         mrc = getattr(self.backend, "marginal_request_cost", None)
         if mrc is not None:
+            if req.resume is not None:
+                return sum(mrc(p, req.remaining_new, 1)
+                           for p in req.resume.prompts)
             return mrc(req.prompt, req.max_new_tokens, req.n_samples)
         rc = getattr(self.backend, "request_cost", None)
         if rc is None:
             return req.n_samples
+        if req.resume is not None:
+            return sum(rc(len(p), req.remaining_new, 1)
+                       for p in req.resume.prompts)
         return rc(len(req.prompt), req.max_new_tokens, req.n_samples)
 
     def _kv_bytes_in_use(self) -> Optional[int]:
@@ -495,6 +716,235 @@ class ContinuousBatchingScheduler:
         """Move the simulated clock forward (idle time between arrivals)."""
         self.clock = max(self.clock, t_s)
 
+    def _router_devices(self) -> Optional[List[str]]:
+        orch = getattr(self.router, "orchestrator", None)
+        devices = getattr(orch, "devices", None)
+        if devices is None:
+            return None
+        return [d.name for d in devices]
+
+    def _push_healthy(self) -> None:
+        names = self._router_devices()
+        if names is not None and hasattr(self.router, "set_healthy"):
+            self.router.set_healthy(
+                [n for n in names if n not in self._failed_devices])
+            self._reroute_pending = True
+
+    def on_drift(self, event) -> None:
+        """`DriftEvent`-bus consumer (``safety.subscribe(sched.on_drift)``).
+
+        ``device_failed`` is the one that matters for in-flight work: every
+        batch whose routed assignment includes the failed device is
+        preempted at the next decode boundary and its requests re-queued
+        with retry backoff — they must not run to completion against a dead
+        placement. ``device_recovered`` restores the routing surface. The
+        chaos-harness kinds ``kv_squeeze`` (blocks withheld from admission)
+        and ``slow_kernel`` (service-time inflation) adjust the admission /
+        pricing state the next formations see. Re-anneal decisions stay the
+        `ControlLoop`'s job — this hook only keeps the scheduler's own
+        state (in-flight batches, admission headroom) consistent with the
+        event."""
+        kind = getattr(event, "kind", None)
+        if kind == "device_failed":
+            self._failed_devices.add(event.device)
+            for entry in list(self.inflight):
+                assignment = getattr(entry.decision, "assignment", None)
+                names = getattr(assignment, "device_names", None)
+                if names is not None and event.device in names():
+                    self.preempt(entry, "fault")
+            self._push_healthy()
+        elif kind == "device_recovered":
+            self._failed_devices.discard(event.device)
+            self._push_healthy()
+        elif kind == "kv_squeeze":
+            self.kv_reserve = max(0, int(event.value))
+        elif kind == "slow_kernel":
+            self.latency_inflation = max(1.0, float(event.value))
+
+    # ---------------------------------------------------------- preemption
+    def _consumed_fraction(self, entry: _InflightEntry) -> float:
+        """Share of the batch's routed service time already spent, on the
+        decode-progress clock (a batch still chunk-prefilling has step 0)."""
+        h = entry.handle
+        mx = max(int(getattr(h, "max_new", 1) or 1), 1)
+        return min(1.0, int(getattr(h, "step", 0)) / mx)
+
+    def _snapshot(self, entry: _InflightEntry) -> List[Optional[ResumeState]]:
+        """Decode-boundary snapshot: per-request sample histories + emitted
+        tokens/logprobs, composed over any earlier preemption's state.
+        Speculative rows are trimmed to the request's minimum committed
+        count so the resumed bucket stays rectangular. ``None`` for a
+        request with nothing emitted yet (it resumes as a fresh request)."""
+        h = entry.handle
+        sp = getattr(h, "spec", None)
+        out_toks = getattr(h, "out_toks", None) or []
+        if sp is not None:
+            toks = [np.asarray(row, np.int64) for row in sp.toks]
+            lps = [np.asarray(row, np.float64) for row in sp.lps]
+        elif out_toks:
+            stacked = np.stack(out_toks, axis=1)       # (B, T[, K])
+            lstack = np.stack(h.out_lps, axis=1)       # (B, T)
+            toks = [stacked[i] for i in range(stacked.shape[0])]
+            lps = [lstack[i].astype(np.float64)
+                   for i in range(lstack.shape[0])]
+        else:
+            n = sum(r.n_samples for r in entry.requests)
+            toks = [np.zeros(0, np.int64)] * n
+            lps = [np.zeros(0, np.float64)] * n
+        states: List[Optional[ResumeState]] = []
+        off = 0
+        for req in entry.requests:
+            k = req.n_samples
+            rows_t, rows_l = toks[off:off + k], lps[off:off + k]
+            off += k
+            keep = min(len(r) for r in rows_t)
+            prev = req.resume
+            if keep == 0 and prev is None:
+                states.append(None)
+                continue
+            prompts, full_t, full_l = [], [], []
+            for i in range(k):
+                nt, nl = rows_t[i][:keep], rows_l[i][:keep]
+                hist = prev.prompts[i] if prev is not None else \
+                    np.asarray(req.prompt)
+                prompts.append(np.concatenate([hist, nt.astype(hist.dtype)],
+                                              axis=0) if keep else hist)
+                if prev is not None:
+                    full_t.append(np.concatenate(
+                        [prev.toks[i], nt.astype(prev.toks[i].dtype)],
+                        axis=0) if keep else prev.toks[i])
+                    full_l.append(np.concatenate([prev.lps[i], nl]))
+                else:
+                    full_t.append(nt)
+                    full_l.append(nl)
+            states.append(ResumeState(prompts=prompts, toks=full_t,
+                                      lps=full_l))
+        return states
+
+    def preempt(self, entry: _InflightEntry, reason: str
+                ) -> List[ServeRequest]:
+        """Cut an in-flight batch at the current decode-step boundary.
+
+        The victim's per-request state becomes `ResumeState` snapshots, the
+        backend parks its filled blocks in the resident prefix pool
+        (``park_batch`` — resume prefills only the post-preemption tail) or
+        releases them, and the requests return to the *head* of the queue
+        with their original arrival/seq. The simulated pipeline rolls back
+        to the preemption instant, which is where the interactive-tier p95
+        win comes from. Fault evictions (+``reason="fault"``) additionally
+        arm exponential retry backoff; a request past ``max_retries`` is
+        cancelled as failed instead of re-queued."""
+        if entry not in self.inflight:
+            raise ValueError("preempt of a batch that is not in flight")
+        frac = self._consumed_fraction(entry)
+        t_p = min(entry.done_t,
+                  max(self.clock,
+                      entry.start_t + entry.decision.latency_s * frac))
+        states = self._snapshot(entry)
+        park = getattr(self.backend, "park_batch", None)
+        if park is not None:
+            # one history per sequence row, aligned with the handle's
+            # (prompt x repeat) order — a request with nothing committed
+            # contributes its bare prompt (already trie-indexed at prefill)
+            histories = []
+            for req, st in zip(entry.requests, states):
+                if st is not None:
+                    histories.extend(st.prompts)
+                else:
+                    histories.extend([np.asarray(req.prompt)]
+                                     * req.n_samples)
+            park(entry.handle, histories)
+        else:
+            release = getattr(self.backend, "release", None)
+            if release is not None:
+                release(entry.handle)
+        self.inflight.remove(entry)
+        # the victim held the pipeline tail: service time it will not use
+        # returns to the pipeline (preemption of an interior entry cannot
+        # shorten later entries' already-fixed start times)
+        if entry.done_t >= self.pipeline_free_t - 1e-12:
+            self.pipeline_free_t = t_p
+        self.clock = max(self.clock, t_p)
+        entry.record.preempted = reason
+        entry.record.preempted_t_s = t_p
+        self.preemptions[reason] = self.preemptions.get(reason, 0) + 1
+        tracer = self.obs.tracer
+        requeue: List[ServeRequest] = []
+        for req, st in zip(entry.requests, states):
+            req.resume = st
+            req.preemptions += 1
+            if reason == "fault":
+                req.retries += 1
+                self.retries_total += 1
+                if self._m is not None:
+                    self._m["retries"].inc(tier=req.tier_name)
+                if req.retries > self.config.max_retries:
+                    self._cancel(req, "retry_exhausted")
+                    continue
+                req.not_before_s = t_p + self.config.retry_backoff_s * \
+                    (2 ** (req.retries - 1))
+            requeue.append(req)
+            if tracer.enabled:
+                tracer.emit("preempt", t_p, request_id=req.id,
+                            batch_id=entry.record.batch_id, reason=reason,
+                            tier=req.tier_name,
+                            emitted=req.emitted_tokens)
+        self.queue.push_front(requeue)
+        if self._m is not None:
+            self._m["preempt"].inc(reason=reason)
+            self._m["inflight"].set(len(self.inflight))
+        return requeue
+
+    def _cancel(self, req: ServeRequest, reason: str) -> None:
+        """Drop a request without a result (deadline / shed / retry budget).
+        Only queued (KV-less) requests are cancelled, so nothing can leak;
+        a parked resume chain stays an idle, LRU-evictable trie entry."""
+        self.cancelled[req.id] = (req, reason)
+        if reason == "deadline":
+            self.deadline_misses += 1
+            if self._m is not None:
+                self._m["deadline_miss"].inc(tier=req.tier_name)
+        elif reason == "shed":
+            self.shed_total += 1
+            if self._m is not None:
+                self._m["shed"].inc(tier=req.tier_name)
+        if self.obs.tracer.enabled:
+            self.obs.tracer.emit("cancel", self.clock, request_id=req.id,
+                                 reason=reason, tier=req.tier_name,
+                                 deadline_s=req.deadline_s)
+
+    def _maybe_preempt_for_tier(self) -> Optional[Tuple]:
+        """Tier-priority preemption check: when the best waiting request
+        outranks every member of the simulated-pipeline tail batch (and the
+        projected wait is worth it), cut the tail. Returns the waiting
+        request's bucket key so the caller forms its batch first — the
+        victims re-queued at their original seq would otherwise win the
+        FIFO pop right back."""
+        cfg = self.config
+        if not cfg.preempt or not self.inflight:
+            return None
+        if getattr(self.backend, "release", None) is None:
+            return None                     # backend cannot release mid-batch
+        head = self.queue.peek_ready(self.clock)
+        if head is None:
+            return None
+        entry = max(self.inflight, key=lambda e: e.done_t)
+        if tier_priority(head.tier) <= max(tier_priority(r.tier)
+                                           for r in entry.requests):
+            return None
+        gain = entry.done_t - max(self.clock, head.arrival_s)
+        if gain <= cfg.preempt_min_gain_s:
+            return None
+        if any(r.preemptions >= cfg.preempt_max_per_request
+               for r in entry.requests):
+            return None                     # no-starvation: victim cap hit
+        if cfg.preempt_age_bound_s is not None and \
+                any(self.clock - r.arrival_s > cfg.preempt_age_bound_s
+                    for r in entry.requests):
+            return None                     # no-starvation: victim too old
+        self.preempt(entry, "tier")
+        return self.queue._key(head)
+
     # ------------------------------------------------------------ batching
     def _batch_rng(self, requests: List[ServeRequest]):
         import jax
@@ -514,12 +964,14 @@ class ContinuousBatchingScheduler:
             base = jax.random.fold_in(self._base_rng, self._batch_id)
         return jax.random.split(base)[1]
 
-    def _form_batch(self) -> Optional[_InflightEntry]:
+    def _form_batch(self, bucket: Optional[Tuple] = None
+                    ) -> Optional[_InflightEntry]:
         free = self._capacity_free()
         if free is not None and free <= 0:
             return None
         reqs = self.queue.pop_batch(self.config.max_batch_requests, free,
-                                    self._request_cost)
+                                    self._request_cost, now=self.clock,
+                                    bucket=bucket)
         if not reqs:
             return None
         # extras compatibility: one batch stacks one set of per-request
@@ -543,8 +995,8 @@ class ContinuousBatchingScheduler:
             route_kwargs = dict(
                 samples=math.ceil(sum(r.n_samples for r in reqs)
                                   / len(reqs)),
-                prompt_tokens=len(reqs[0].prompt),
-                decode_tokens=reqs[0].max_new_tokens)
+                prompt_tokens=len(reqs[0].effective_prompt),
+                decode_tokens=reqs[0].remaining_new)
             if self.spec_planner is not None:
                 decision = self.spec_planner.route_batch(
                     self.router, [r.tier for r in reqs], **route_kwargs)
@@ -564,22 +1016,70 @@ class ContinuousBatchingScheduler:
             self.backend.note_spec(spec_plan.n)
 
         start = max(self.clock, self.pipeline_free_t)
-        done_t = start + decision.latency_s
+        # latency_inflation > 1 models injected slow-kernel faults (chaos
+        # harness): the routed estimate stands, service time stretches
+        done_t = start + decision.latency_s * self.latency_inflation
         self.pipeline_free_t = done_t
+        # a resumed request contributes its n_samples per-sample histories
+        # as distinct prompt rows (repeat 1 each): samples may have diverged
+        prompts: List[np.ndarray] = []
+        nsamps: List[int] = []
+        for r in reqs:
+            if r.resume is not None:
+                prompts.extend(r.resume.prompts)
+                nsamps.extend([1] * r.n_samples)
+            else:
+                prompts.append(r.prompt)
+                nsamps.append(r.n_samples)
         extras = None
         if reqs[0].extras:
-            extras = {k: np.stack([r.extras[k] for r in reqs])
+            extras = {k: np.stack([r.extras[k]
+                                   for r in reqs
+                                   for _ in range(r.n_samples
+                                                  if r.resume is not None
+                                                  else 1)])
                       for k in reqs[0].extras}
         tracer = self.obs.tracer
         tracer.batch_context = self._batch_id
         try:
             handle = self.backend.start_batch(
-                [r.prompt for r in reqs], [r.n_samples for r in reqs],
-                reqs[0].max_new_tokens, reqs[0].temperature,
-                self._batch_rng(reqs), extras)
+                prompts, nsamps, reqs[0].remaining_new,
+                reqs[0].temperature, self._batch_rng(reqs), extras)
         finally:
             tracer.batch_context = None
         self.backend.note_placement(decision.assignment)
+
+        # resume accounting: a parked victim's full-prefix chains come back
+        # as trie hits, so only the post-preemption tail prefills — the
+        # bytes-saved counter is the robustness claim's receipt
+        resume_reqs = resume_full = resume_tail = 0
+        layout = getattr(handle, "paged", None)
+        hit_counts = layout.hit_counts if layout is not None else []
+        bs = layout.block_size if layout is not None else 1
+        row = 0
+        for r in reqs:
+            n_rows = r.n_samples if r.resume is not None else 1
+            if r.resume is not None:
+                resume_reqs += 1
+                for i in range(row, row + n_rows):
+                    full = len(prompts[i])
+                    hits = hit_counts[i] if i < len(hit_counts) else 0
+                    resume_full += full
+                    resume_tail += full - hits * bs
+                if tracer.enabled:
+                    tracer.emit("resume", start, request_id=r.id,
+                                batch_id=self._batch_id,
+                                tier=r.tier_name,
+                                emitted=r.emitted_tokens,
+                                preemptions=r.preemptions)
+            row += n_rows
+        if resume_reqs:
+            self.resume_full_tokens += resume_full
+            self.resume_tail_tokens += resume_tail
+            if self._m is not None:
+                ktb = getattr(self.backend, "kv_token_bytes", 0) or 0
+                self._m["resume_saved"].inc(
+                    (resume_full - resume_tail) * int(ktb))
 
         tier_mix: Dict[str, int] = {}
         for r in reqs:
@@ -589,7 +1089,7 @@ class ContinuousBatchingScheduler:
         hspec = getattr(handle, "spec", None)
         record = BatchRecord(
             batch_id=self._batch_id, t_s=start,
-            bucket=len(reqs[0].prompt), n_requests=len(reqs),
+            bucket=len(reqs[0].effective_prompt), n_requests=len(reqs),
             n_sequences=sum(r.n_samples for r in reqs), tier_mix=tier_mix,
             queue_delay_s=max(start - r.arrival_s for r in reqs),
             point_index=decision.point_index,
@@ -609,9 +1109,13 @@ class ContinuousBatchingScheduler:
             spec_accept_rate=(spec_plan.accept_rate
                               if spec_plan is not None and spec_plan.enabled
                               else None),
+            resume_requests=resume_reqs,
+            resume_full_tokens=resume_full,
+            resume_tail_tokens=resume_tail,
             request_entries=[{"id": r.id, "tier": r.tier_name,
                               "n_samples": r.n_samples,
-                              "queue_delay_s": start - r.arrival_s}
+                              "queue_delay_s": start - r.arrival_s,
+                              "resumed": r.resume is not None}
                              for r in reqs])
         self._reroute_pending = False
         self._batch_id += 1
@@ -695,6 +1199,73 @@ class ContinuousBatchingScheduler:
                 off += r.n_samples
         return 0
 
+    def _merge_resumed(self, req: ServeRequest, tails) -> Any:
+        """Splice a resumed request's pre-preemption snapshot onto its
+        post-resume tail results: token streams concatenate (then re-truncate
+        at the first eos over the WHOLE stream, matching an uninterrupted
+        run), per-sample mean logprobs merge as the token-count-weighted
+        mean — exactly the uninterrupted mean for deterministic decode."""
+        from repro.serving.backend import GenerationResult
+        st = req.resume
+        eos = getattr(self.backend, "eos_token", None)
+        samples, logprobs = [], []
+        for i, tail in enumerate(tails):
+            pre_t, pre_l = st.toks[i], st.lps[i]
+            new = tail.samples[0]
+            full = np.concatenate([pre_t.astype(new.dtype), new], axis=0) \
+                if len(pre_t) else new
+            if eos is not None and full.ndim == 1:
+                hits = np.nonzero(full == eos)[0]
+                if hits.size:
+                    full = full[: hits[0]]
+            samples.append(full)
+            # tail.logprobs[0] averaged over the tail's full decode horizon
+            n_new = req.max_new_tokens - len(pre_l)
+            tot = len(pre_l) + n_new
+            logprobs.append(float(
+                (pre_l.sum() + tail.logprobs[0] * n_new) / max(tot, 1)))
+        req.resume = None
+        return GenerationResult(
+            prompt=req.prompt, samples=samples, logprobs=logprobs,
+            prefill_tokens=len(req.prompt),
+            decode_tokens=req.max_new_tokens * req.n_samples)
+
+    def _enforce_deadlines(self) -> None:
+        for req in self.queue.expire(self.clock):
+            self._cancel(req, "deadline")
+
+    def _enforce_shedding(self) -> None:
+        """Watermark-driven load shedding, oldest-economy-first. Queue-depth
+        and evictable-KV watermarks both shed from the *queue* (cancelled
+        requests hold no blocks, so shedding can never leak); when the KV
+        watermark trips with an empty queue the pressure is in-flight, and
+        the lowest-priority pipeline-tail batch is preempted instead (its
+        parked chains are evictable, which is what the watermark wants)."""
+        cfg = self.config
+        if cfg.shed_queue_depth is not None:
+            while self.queue.pending > cfg.shed_queue_depth:
+                victim = self.queue.shed_oldest(tier_priority)
+                if victim is None:
+                    break
+                self._cancel(victim, "shed")
+        if cfg.shed_kv_free_frac is not None:
+            total = self._capacity_total()
+            free = self._capacity_free()
+            if total and free is not None and \
+                    free < cfg.shed_kv_free_frac * total:
+                victim = self.queue.shed_oldest(tier_priority)
+                if victim is not None:
+                    self._cancel(victim, "shed")
+                elif self.inflight and cfg.preempt and \
+                        getattr(self.backend, "release", None) is not None:
+                    entry = min(
+                        self.inflight,
+                        key=lambda e: (max(tier_priority(r.tier)
+                                           for r in e.requests), -e.done_t))
+                    if all(r.preemptions < cfg.preempt_max_per_request
+                           for r in entry.requests):
+                        self.preempt(entry, "shed")
+
     def _retire(self, entry: _InflightEntry) -> None:
         results = self.backend.finalize(entry.handle)
         self.clock = max(self.clock, entry.done_t)
@@ -720,7 +1291,18 @@ class ContinuousBatchingScheduler:
                 if merged is not None:
                     rec["tier"] = str(merged.name)
                 self.trace.ingest(rec)
-        for req, res in zip(entry.requests, results):
+        off = 0
+        for req in entry.requests:
+            if req.resume is not None:
+                # resumed request: n_samples single-sample results, each the
+                # post-preemption tail — splice onto the snapshot so the
+                # caller sees one uninterrupted completion
+                k = req.n_samples
+                res = self._merge_resumed(req, results[off:off + k])
+                off += k
+            else:
+                res = results[off]
+                off += 1
             self.completed[req.id] = CompletedRequest(
                 request=req, result=res, batch_id=entry.record.batch_id,
                 queue_delay_s=entry.start_t - req.arrival_s,
@@ -737,12 +1319,20 @@ class ContinuousBatchingScheduler:
 
     # ---------------------------------------------------------------- step
     def step(self) -> bool:
-        """One scheduler iteration: form batches while capacity allows, then
-        one decode token per in-flight batch; retire finished batches.
-        Returns False when there was nothing to do."""
+        """One scheduler iteration: enforce lifecycle policies (deadlines,
+        shedding), check tier preemption, form batches while capacity
+        allows, then one decode token per in-flight batch; retire finished
+        batches. Returns False when there was nothing to do."""
         progressed = False
+        self._enforce_deadlines()
+        self._enforce_shedding()
+        # tier preemption returns the outranking waiter's bucket so its
+        # batch forms FIRST — the re-queued victims hold older seqs and
+        # would win the FIFO pop right back otherwise
+        bucket_pref = self._maybe_preempt_for_tier()
         while len(self.inflight) < self.config.max_inflight_batches:
-            entry = self._form_batch()
+            entry = self._form_batch(bucket_pref)
+            bucket_pref = None
             if entry is None:
                 break
             self.inflight.append(entry)
@@ -759,6 +1349,13 @@ class ContinuousBatchingScheduler:
             if entry.handle.done:
                 self.inflight.remove(entry)
                 self._retire(entry)
+                progressed = True
+        if not progressed and not self.inflight and self.queue.pending:
+            # everything queued is backoff-parked: jump the sim clock to the
+            # earliest retry instant instead of reporting starvation
+            nb = self.queue.earliest_not_before()
+            if nb is not None and nb > self.clock:
+                self.advance_to(nb)
                 progressed = True
         if self._m is not None:
             self._m["inflight"].set(len(self.inflight))
@@ -804,6 +1401,15 @@ class ContinuousBatchingScheduler:
             "pool_evictions": sum(r.pool_evictions for r in self.records),
             "prefill_bytes_saved": sum(r.prefill_bytes_saved
                                        for r in self.records),
+            # robustness ledger: preemption / lifecycle-policy outcomes
+            "preemptions": dict(self.preemptions),
+            "preemptions_total": sum(self.preemptions.values()),
+            "deadline_misses": self.deadline_misses,
+            "retries_total": self.retries_total,
+            "shed_total": self.shed_total,
+            "cancelled": len(self.cancelled),
+            "resume_full_tokens": self.resume_full_tokens,
+            "resume_tail_tokens": self.resume_tail_tokens,
         }
 
 

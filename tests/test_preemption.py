@@ -1,0 +1,712 @@
+"""Preemptive serving under faults (PR 10 robustness contract).
+
+* Decode-boundary preemption: a tier-outranked pipeline-tail batch is cut,
+  its per-request state snapshots into `ResumeState`, and the merged final
+  result is token-identical to an uninterrupted run (the stub backend's
+  token stream is a pure function of history length, so splicing errors
+  cannot hide).
+* push_front fairness: a preempted request keeps its original arrival/seq —
+  its completed ``queue_delay_s`` reflects TOTAL wall time.
+* Lifecycle policies: per-tier deadlines cancel overdue queued work, fault
+  evictions retry with exponential backoff (and cancel past the budget),
+  queue-depth / KV-watermark load shedding drops oldest-economy-first.
+* DriftEvent wiring: ``device_failed`` preempts in-flight batches routed
+  onto the dead device; ``kv_squeeze`` / ``slow_kernel`` adjust admission
+  and service-time state; the chaos harness replays a seeded `FaultPlan`
+  through the real `SafetyMonitor` bus.
+* Real-backend guarantees (JAX): hypothesis-driven allocator invariants
+  (``in_use + free == total`` under random preempt/resume/cancel/fault
+  interleavings, zero refcount leaks after drain), bit-parity of a
+  preempted-then-resumed greedy request against an uninterrupted run
+  (dense and paged+pooled, with and without speculative decode), and
+  chunked-prefill bit-parity against the one-shot prefill.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.devices import EDGE_PLATFORM
+from repro.core.safety import DriftEvent, SafetyMonitor
+from repro.models import ArchConfig
+from repro.qeil2 import SLATier, merge_tiers
+from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
+                           tier_priority)
+from repro.serving.chaos import ChaosDriver, FaultAction, FaultPlan, attach
+
+# ------------------------------------------------------------------- stubs
+
+
+class _Handle:
+    """Deterministic stream: a row with history length L emits tokens
+    L, L+1, ... — a pure function of history, so a preempted-then-resumed
+    request reproduces the uninterrupted stream exactly iff the scheduler's
+    snapshot/merge bookkeeping is right."""
+
+    def __init__(self, prompts, repeats, max_new):
+        self.prompts = [np.asarray(p) for p in prompts]
+        self.repeats = list(repeats)
+        self.plen = len(prompts[0])
+        self.max_new = max_new
+        self.spec = None
+        self.row_plens = [len(p) for p, k in zip(prompts, repeats)
+                          for _ in range(k)]
+        self.step = 1                       # first token sampled at prefill
+        self.out_toks = [np.asarray(self.row_plens, np.int64)]
+        self.out_lps = [np.full(len(self.row_plens), -0.5)]
+
+    @property
+    def n_sequences(self):
+        return sum(self.repeats)
+
+    @property
+    def done(self):
+        return self.step >= self.max_new
+
+
+class _PreemptBackend:
+    """Policy double with the release contract preemption needs (the plain
+    scheduler stub has no ``release``, which auto-disables preemption)."""
+
+    def __init__(self, max_slots=None):
+        self.max_slots = max_slots
+        self.slots_in_use = 0
+        self.batches = []
+        self.released = []
+        self._live = {}
+
+    @property
+    def slots_free(self):
+        if self.max_slots is None:
+            return None
+        return self.max_slots - self.slots_in_use
+
+    def note_placement(self, placement):
+        pass
+
+    def start_batch(self, prompts, n_samples, max_new, temperature, rng,
+                    extras=None):
+        plens = [len(p) for p in prompts]
+        assert len(set(plens)) == 1, "backend got a mixed-bucket batch"
+        h = _Handle(list(prompts), list(n_samples), max_new)
+        self.slots_in_use += h.n_sequences
+        self._live[id(h)] = h
+        self.batches.append((plens, list(n_samples)))
+        return h
+
+    def decode_step(self, h):
+        h.out_toks.append(np.asarray([pl + h.step for pl in h.row_plens],
+                                     np.int64))
+        h.out_lps.append(np.full(len(h.row_plens), -0.5))
+        h.step += 1
+        return not h.done
+
+    def release(self, h):
+        if self._live.pop(id(h), None) is None:
+            raise RuntimeError("double release")
+        self.slots_in_use -= h.n_sequences
+        self.released.append(h)
+
+    def finalize(self, h):
+        self.release(h)
+        toks = np.stack(h.out_toks, axis=1)        # (B, T)
+        out, off = [], 0
+        for p, k in zip(h.prompts, h.repeats):
+            out.append(SimpleNamespace(
+                prompt=p, samples=[toks[off + i] for i in range(k)],
+                logprobs=[-0.5] * k))
+            off += k
+        return out
+
+
+class _StubRouter:
+    def __init__(self, tiers, base_latency_s=1.0, per_request_s=0.25,
+                 device=None):
+        self.tiers = {t.name: t for t in tiers}
+        self.base = base_latency_s
+        self.per_request = per_request_s
+        self.device = device               # stamps assignment.device_names
+
+    def resolve_tier(self, tier):
+        return self.tiers[tier] if isinstance(tier, str) else tier
+
+    def required_samples(self, tier):
+        return None
+
+    def route_batch(self, tiers, **kw):
+        members = [self.resolve_tier(t) for t in tiers]
+        assignment = object()
+        if self.device is not None:
+            dev = self.device
+            assignment = SimpleNamespace(device_names=lambda: [dev])
+        return SimpleNamespace(
+            tier=merge_tiers(members), tier_counts={},
+            assignment=assignment, point_index=0, meets_caps=True,
+            batch_costs=None, energy_j=1.0 * len(members),
+            latency_s=self.base + self.per_request * len(members), notes=[])
+
+
+def _tiers3(p99=None):
+    return [SLATier("interactive", latency_p99_s=p99,
+                    energy_weight=0.0, latency_weight=1.0),
+            SLATier("standard", energy_weight=0.5, latency_weight=0.5),
+            SLATier("economy", energy_weight=1.0, latency_weight=0.0)]
+
+
+def _prompt(n, mult=1):
+    return (mult * np.arange(1, n + 1, dtype=np.int32)) % 61
+
+
+def _expected_tokens(plen, max_new):
+    """The stub stream an uninterrupted request emits."""
+    return np.arange(plen, plen + max_new, dtype=np.int64)
+
+
+def _sched(preempt=True, max_slots=None, device=None, obs=None, **cfg_kw):
+    cfg_kw.setdefault("max_batch_requests", 2)
+    cfg_kw.setdefault("max_inflight_batches", 1)
+    cfg_kw.setdefault("max_new_tokens", 8)
+    backend = _PreemptBackend(max_slots=max_slots)
+    sched = ContinuousBatchingScheduler(
+        backend, _StubRouter(_tiers3(), device=device),
+        SchedulerConfig(preempt=preempt, **cfg_kw), obs=obs)
+    return sched, backend
+
+
+# --------------------------------------------------- tier preemption (stub)
+
+def test_interactive_cuts_economy_and_both_streams_survive():
+    sched, backend = _sched()
+    adm_e = sched.submit(_prompt(8), tier="economy")
+    sched.step()                           # economy enters service
+    sched.step()                           # one more decode step
+    assert len(sched.inflight) == 1
+    econ_done_t = sched.inflight[0].done_t
+    adm_i = sched.submit(_prompt(6), tier="interactive")
+    sched.run_until_idle()
+
+    assert sched.preemptions == {"tier": 1}
+    assert set(sched.completed) == {adm_e.request_id, adm_i.request_id}
+    # interactive was served at the preemption instant, ahead of the
+    # victim's original completion (that's the entire point of the cut)
+    irec = next(r for r in sched.records if r.tier_mix == {"interactive": 1})
+    assert irec.t_s < econ_done_t
+    # the victim's merged stream is exactly the uninterrupted one
+    res = sched.completed[adm_e.request_id].result
+    np.testing.assert_array_equal(res.samples[0], _expected_tokens(8, 8))
+    assert res.logprobs[0] == pytest.approx(-0.5)
+    # the resumed batch re-prefilled the snapshot history (no pool on the
+    # stub, so tail == full)
+    rrec = next(r for r in sched.records if r.resume_requests)
+    assert rrec.resume_full_tokens == rrec.resume_tail_tokens > 8
+    assert not backend._live                # nothing leaked
+
+
+def test_preempted_multisample_request_merges_every_sample():
+    sched, _ = _sched(max_batch_requests=1)
+    adm = sched.submit(_prompt(8), tier="economy", n_samples=3)
+    sched.step()
+    sched.preempt(sched.inflight[0], "tier")
+    sched.run_until_idle()
+    res = sched.completed[adm.request_id].result
+    assert len(res.samples) == 3
+    for s in res.samples:
+        np.testing.assert_array_equal(s, _expected_tokens(8, 8))
+
+
+def test_economy_waiter_never_preempts_interactive():
+    sched, _ = _sched()
+    sched.submit(_prompt(8), tier="interactive")
+    sched.step()
+    sched.submit(_prompt(6), tier="economy")
+    sched.run_until_idle()
+    assert sched.preemptions == {}
+
+
+def test_preempt_off_runs_to_completion():
+    sched, _ = _sched(preempt=False)
+    sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    sched.submit(_prompt(6), tier="interactive")
+    sched.run_until_idle()
+    assert sched.preemptions == {}
+    assert len(sched.completed) == 2
+
+
+def test_preemption_cap_is_a_no_starvation_bound():
+    sched, _ = _sched(preempt_max_per_request=1, max_new_tokens=8)
+    adm_e = sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    sched.submit(_prompt(6), tier="interactive")
+    sched.step()                           # preemption #1 fires
+    assert sched.preemptions == {"tier": 1}
+    # economy resumes; a second interactive may NOT cut it again
+    while not any(r.resume_requests for r in sched.records):
+        sched.step()
+    sched.submit(_prompt(6, mult=2), tier="interactive")
+    sched.run_until_idle()
+    assert sched.preemptions == {"tier": 1}
+    assert sched.completed[adm_e.request_id].request.preemptions == 1
+    assert len(sched.completed) == 3
+
+
+def test_preemption_rolls_back_the_pipeline_tail():
+    sched, _ = _sched()
+    sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    entry = sched.inflight[0]
+    before = sched.pipeline_free_t
+    assert before == entry.done_t
+    sched.preempt(entry, "tier")
+    assert sched.pipeline_free_t < before
+    assert sched.pipeline_free_t == entry.record.preempted_t_s
+    assert entry.record.preempted == "tier"
+
+
+# ---------------------------------------------------- push_front fairness
+
+def test_preempted_queue_delay_reflects_total_wall_time():
+    """Regression (PR 10): push_front keeps the original arrival_s/seq, so
+    a preempted request's completed queue_delay_s is measured from its
+    FIRST submission — never from the re-queue instant."""
+    sched, _ = _sched()
+    adm_e = sched.submit(_prompt(8), tier="economy")     # arrival 0.0
+    sched.step()
+    sched.step()
+    sched.submit(_prompt(6), tier="interactive")
+    sched.run_until_idle()
+    done = sched.completed[adm_e.request_id]
+    assert done.request.arrival_s == 0.0
+    resumed_start = next(r.t_s for r in sched.records if r.resume_requests)
+    assert resumed_start > 0.0
+    # delay == (second service start - ORIGINAL arrival), i.e. total wait
+    assert done.queue_delay_s == pytest.approx(resumed_start)
+    rrec = next(r for r in sched.records if r.resume_requests)
+    assert rrec.request_entries[0]["resumed"] is True
+    assert rrec.request_entries[0]["queue_delay_s"] == \
+        pytest.approx(resumed_start)
+
+
+# ------------------------------------------------ fault eviction + retries
+
+def test_device_failure_preempts_and_retries_with_backoff():
+    sched, backend = _sched(device="edge-npu", retry_backoff_s=0.125)
+    adm = sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    sched.on_drift(DriftEvent(0.5, "edge-npu", "device_failed"))
+    assert not sched.inflight
+    assert sched.preemptions == {"fault": 1}
+    assert sched.retries_total == 1
+    assert "edge-npu" in sched._failed_devices
+    req = next(iter(r for q in sched.queue._buckets.values() for r in q))
+    t_p = sched.records[0].preempted_t_s
+    assert req.not_before_s == pytest.approx(t_p + 0.125)
+    # idle backoff: the drain jumps the sim clock to the retry instant
+    sched.run_until_idle()
+    assert sched.clock >= req.not_before_s
+    res = sched.completed[adm.request_id].result
+    np.testing.assert_array_equal(res.samples[0], _expected_tokens(8, 8))
+    assert not backend._live
+
+
+def test_fault_backoff_is_exponential():
+    sched, _ = _sched(device="edge-npu", retry_backoff_s=0.1,
+                      max_retries=10)
+    sched.submit(_prompt(8), tier="economy")
+    gaps = []
+    for _ in range(3):
+        sched.step()
+        while not sched.inflight:
+            sched.step()
+        sched.on_drift(DriftEvent(sched.clock, "edge-npu", "device_failed"))
+        req = next(r for q in sched.queue._buckets.values() for r in q)
+        gaps.append(req.not_before_s - sched.records[-1].preempted_t_s)
+    assert gaps == pytest.approx([0.1, 0.2, 0.4])
+
+
+def test_fault_retry_budget_exhaustion_cancels():
+    sched, backend = _sched(device="edge-npu", max_retries=0)
+    adm = sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    sched.on_drift(DriftEvent(0.5, "edge-npu", "device_failed"))
+    assert adm.request_id in sched.cancelled
+    assert sched.cancelled[adm.request_id][1] == "retry_exhausted"
+    assert sched.queue.pending == 0 and not sched.inflight
+    assert not backend._live
+
+
+def test_fault_leaves_unrelated_placements_alone():
+    sched, _ = _sched(device="edge-npu")
+    sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    sched.on_drift(DriftEvent(0.5, "soc-gpu", "device_failed"))
+    assert sched.inflight and sched.preemptions == {}
+    sched.on_drift(DriftEvent(0.6, "soc-gpu", "device_recovered"))
+    assert "soc-gpu" not in sched._failed_devices
+
+
+def test_kv_squeeze_and_slow_kernel_state():
+    sched, _ = _sched(max_slots=8)
+    sched.on_drift(DriftEvent(0.0, "", "kv_squeeze", value=5.0))
+    assert sched.kv_reserve == 5
+    assert sched._capacity_free() == 3
+    sched.on_drift(DriftEvent(0.1, "", "slow_kernel", value=2.0))
+    sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    entry = sched.inflight[0]
+    assert entry.done_t - entry.start_t == \
+        pytest.approx(2.0 * entry.decision.latency_s)
+    sched.on_drift(DriftEvent(0.2, "", "kv_squeeze", value=0.0))
+    sched.on_drift(DriftEvent(0.2, "", "slow_kernel", value=1.0))
+    assert sched.kv_reserve == 0 and sched.latency_inflation == 1.0
+
+
+# ------------------------------------------------------ lifecycle policies
+
+def test_deadline_cancels_overdue_queued_requests():
+    backend = _PreemptBackend()
+    tiers = _tiers3(p99=1.0)
+    sched = ContinuousBatchingScheduler(
+        backend, _StubRouter(tiers),
+        SchedulerConfig(max_batch_requests=1, max_inflight_batches=1,
+                        max_new_tokens=8, deadline_factor=1.0))
+    ids = [sched.submit(_prompt(8, mult=m + 1), tier="interactive").request_id
+           for m in range(4)]
+    sched.run_until_idle()
+    # batch latency 1.25 > deadline 1.0: only the first request (served
+    # immediately) completes; the queued rest expire once the clock passes
+    assert set(sched.completed) == {ids[0]}
+    assert sched.deadline_misses == 3
+    assert all(sched.cancelled[i][1] == "deadline" for i in ids[1:])
+    assert len(sched.completed) + len(sched.cancelled) == 4
+
+
+def test_economy_is_deadline_exempt_without_a_cap():
+    backend = _PreemptBackend()
+    sched = ContinuousBatchingScheduler(
+        backend, _StubRouter(_tiers3(p99=1.0)),
+        SchedulerConfig(max_batch_requests=1, max_inflight_batches=1,
+                        max_new_tokens=8, deadline_factor=1.0))
+    ids = [sched.submit(_prompt(8, mult=m + 1), tier="economy").request_id
+           for m in range(3)]
+    sched.run_until_idle()
+    assert set(sched.completed) == set(ids)
+    assert sched.deadline_misses == 0
+
+
+def test_queue_depth_shed_drops_oldest_economy_first():
+    sched, _ = _sched(shed_queue_depth=2, max_batch_requests=2)
+    ids = [sched.submit(_prompt(8, mult=m + 1), tier="economy").request_id
+           for m in range(4)]
+    keep = sched.submit(_prompt(6), tier="interactive").request_id
+    sched.run_until_idle()
+    assert sched.shed_total == 3
+    assert set(sched.cancelled) == set(ids[:3])       # oldest economy first
+    assert all(reason == "shed" for _, reason in sched.cancelled.values())
+    assert keep in sched.completed and ids[3] in sched.completed
+
+
+def test_kv_watermark_preempts_inflight_when_queue_is_empty():
+    sched, backend = _sched(max_slots=4, shed_kv_free_frac=0.5,
+                            max_batch_requests=1)
+    adm = sched.submit(_prompt(8), tier="economy", n_samples=3)
+    sched.step()                           # 3/4 slots in use, free=1 < 2
+    sched.step()                           # watermark preempts the tail
+    assert sched.preemptions.get("shed", 0) >= 1
+    sched.run_until_idle()
+    res = sched.completed[adm.request_id].result
+    for s in res.samples:
+        np.testing.assert_array_equal(s, _expected_tokens(8, 8))
+    assert not backend._live
+
+
+# ------------------------------------------------------- obs + chaos (stub)
+
+def test_robustness_metrics_and_spans_are_emitted():
+    from repro.obs import make_observability
+    obs = make_observability()
+    sched, _ = _sched(device="edge-npu", obs=obs)
+    sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    sched.step()
+    sched.submit(_prompt(6), tier="interactive")
+    sched.run_until_idle()
+    sched.on_drift(DriftEvent(9.0, "edge-npu", "device_failed"))
+    reg = obs.metrics
+    assert reg.get("serving_preemptions_total").value(reason="tier") == 1
+    assert reg.get("serving_resume_prefill_bytes_saved_total") is not None
+    assert reg.get("serving_deadline_miss_total") is not None
+    assert reg.get("serving_retries_total") is not None
+    names = {s.name for s in obs.tracer.spans}
+    assert {"preempt", "resume"} <= names
+    pre = next(s for s in obs.tracer.spans if s.name == "preempt")
+    assert pre.attrs["reason"] == "tier" and pre.request_id is not None
+
+
+def test_cancel_spans_carry_the_reason():
+    from repro.obs import make_observability
+    obs = make_observability()
+    sched, _ = _sched(device="edge-npu", max_retries=0, obs=obs)
+    sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    sched.on_drift(DriftEvent(0.5, "edge-npu", "device_failed"))
+    spans = [s for s in obs.tracer.spans if s.name == "cancel"]
+    assert spans and spans[0].attrs["reason"] == "retry_exhausted"
+
+
+def test_fault_plan_roundtrip_and_determinism(tmp_path):
+    devs = [d.name for d in EDGE_PLATFORM]
+    p1 = FaultPlan.random(7, devs, horizon_s=10.0, n_failures=2, n_spikes=1,
+                          kv_squeeze_blocks=16, slow_factor=1.5)
+    p2 = FaultPlan.random(7, devs, horizon_s=10.0, n_failures=2, n_spikes=1,
+                          kv_squeeze_blocks=16, slow_factor=1.5)
+    assert p1.actions == p2.actions
+    assert p1.actions == sorted(p1.actions, key=lambda a: a.t_s)
+    path = str(tmp_path / "plan.json")
+    p1.save(path)
+    assert FaultPlan.load(path).actions == p1.actions
+    with pytest.raises(ValueError):
+        FaultAction(0.0, "meteor_strike")
+    with pytest.raises(ValueError):
+        FaultAction(0.0, "device_fail")    # needs a device
+
+
+def test_chaos_driver_replays_through_the_safety_bus():
+    dev = EDGE_PLATFORM[0].name
+    safety = SafetyMonitor(EDGE_PLATFORM)
+    sched, _ = _sched(device=dev)
+    plan = FaultPlan(seed=3, actions=[
+        FaultAction(0.2, "kv_squeeze", value=2.0),
+        FaultAction(0.5, "device_fail", device=dev),
+        FaultAction(1.5, "device_recover", device=dev),
+        FaultAction(2.0, "slow_kernel", value=1.5),
+    ])
+    driver = attach(plan, safety, sched)
+    assert isinstance(driver, ChaosDriver) and not driver.done
+    adm = sched.submit(_prompt(8), tier="economy")
+    sched.step()
+    assert driver.apply_due(0.3)[0].kind == "kv_squeeze"
+    assert sched.kv_reserve == 2
+    fired = driver.apply_due(0.6)
+    assert [a.kind for a in fired] == ["device_fail"]
+    # the failure reached the scheduler over the REAL DriftEvent bus
+    assert sched.preemptions == {"fault": 1}
+    assert dev in sched._failed_devices
+    assert dev not in safety.health.healthy_devices()
+    driver.apply_due(2.5)
+    assert driver.done
+    assert dev not in sched._failed_devices
+    assert sched.latency_inflation == 1.5
+    sched.run_until_idle()
+    assert adm.request_id in sched.completed
+
+
+# ===================================================== real-backend (JAX)
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp                                         # noqa: E402
+
+from repro.models import Model                                  # noqa: E402
+from repro.spec import make_draft_policy                        # noqa: E402
+
+CFG = ArchConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+BS = 4
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = Model(CFG, dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def _real_backend(model_params, kind, spec=False, prefill_chunk=None):
+    from repro.serving import ExecutionBackend
+    model, params = model_params
+    kw = {}
+    if spec:
+        kw = dict(spec_policy=make_draft_policy("ngram"), spec_n=2)
+    if kind == "dense":
+        return ExecutionBackend(model, params, max_slots=8, **kw)
+    assert kind == "pooled"
+    return ExecutionBackend(model, params, kv_blocks=96, kv_block_size=BS,
+                            kv_pool=True, prefill_chunk=prefill_chunk, **kw)
+
+
+def _real_sched(backend, device=None, **cfg_kw):
+    cfg_kw.setdefault("max_batch_requests", 2)
+    cfg_kw.setdefault("max_inflight_batches", 1)
+    return ContinuousBatchingScheduler(
+        backend, _StubRouter(_tiers3(), device=device),
+        SchedulerConfig(preempt=True, max_new_tokens=6, temperature=0.0,
+                        **cfg_kw))
+
+
+def _result_tokens(res):
+    return [np.asarray(s) for s in res.samples]
+
+
+def _assert_results_identical(got, want):
+    assert len(got.samples) == len(want.samples)
+    for g, w in zip(_result_tokens(got), _result_tokens(want)):
+        np.testing.assert_array_equal(g, w)
+    for g, w in zip(got.logprobs, want.logprobs):
+        assert g == pytest.approx(w, rel=1e-5, abs=1e-6)
+
+
+# --------------------------------------------- preempt/resume bit parity
+
+@pytest.mark.parametrize("kind,spec", [("dense", False), ("pooled", False),
+                                       ("dense", True), ("pooled", True)])
+def test_preempted_resume_matches_uninterrupted_greedy(model_params, kind,
+                                                       spec):
+    prompt = _prompt(8)
+    base = _real_sched(_real_backend(model_params, kind, spec=spec))
+    adm = base.submit(prompt, tier="economy", max_new_tokens=6)
+    base.run_until_idle()
+    want = base.completed[adm.request_id].result
+
+    sched = _real_sched(_real_backend(model_params, kind, spec=spec))
+    adm2 = sched.submit(prompt, tier="economy", max_new_tokens=6)
+    sched.step()                           # prefill + first decode boundary
+    assert sched.inflight
+    sched.preempt(sched.inflight[0], "tier")
+    sched.run_until_idle()
+    got = sched.completed[adm2.request_id].result
+    _assert_results_identical(got, want)
+    assert sched.preemptions == {"tier": 1}
+    if kind == "pooled":
+        # the parked chain came back as a trie hit: the resume prefilled
+        # strictly less than a pool-less re-prefill would have
+        assert 0 < sched.resume_tail_tokens < sched.resume_full_tokens
+
+
+def test_preempted_multisample_resume_matches_uninterrupted(model_params):
+    prompt = _prompt(9)
+    base = _real_sched(_real_backend(model_params, "pooled"))
+    adm = base.submit(prompt, tier="economy", n_samples=2, max_new_tokens=6)
+    base.run_until_idle()
+    want = base.completed[adm.request_id].result
+
+    sched = _real_sched(_real_backend(model_params, "pooled"))
+    adm2 = sched.submit(prompt, tier="economy", n_samples=2,
+                        max_new_tokens=6)
+    sched.step()
+    sched.preempt(sched.inflight[0], "tier")
+    sched.run_until_idle()
+    _assert_results_identical(sched.completed[adm2.request_id].result, want)
+
+
+# ----------------------------------------------- chunked prefill parity
+
+@pytest.mark.parametrize("chunk", [3, 4, 16])
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_chunked_prefill_is_bit_identical(model_params, chunk, temperature):
+    def run(prefill_chunk):
+        be = _real_backend(model_params, "pooled",
+                           prefill_chunk=prefill_chunk)
+        out = []
+        for prompts in ([_prompt(9)], [_prompt(13), _prompt(13, mult=2)]):
+            h = be.start_batch(prompts, [2] * len(prompts), 5, temperature,
+                               jax.random.key(3))
+            steps = 0
+            while be.decode_step(h):
+                steps += 1
+                assert steps < 100
+            out.append(be.finalize(h))
+        assert be.allocator.blocks_in_use == be.prefix_pool.blocks_resident
+        return out
+
+    want, got = run(None), run(chunk)
+    for wb, gb in zip(want, got):
+        for w, g in zip(wb, gb):
+            _assert_results_identical(g, w)
+
+
+def test_chunked_prefill_requires_paged(model_params):
+    from repro.serving import ExecutionBackend
+    model, params = model_params
+    with pytest.raises(ValueError):
+        ExecutionBackend(model, params, max_slots=4, prefill_chunk=4)
+    with pytest.raises(ValueError):
+        ExecutionBackend(model, params, kv_blocks=32, kv_block_size=BS,
+                         prefill_chunk=0)
+
+
+def test_scheduler_interleaves_chunked_prefill(model_params):
+    """A chunked-prefill batch spends extra decode_step calls in prefill;
+    output still matches the unchunked scheduler run bitwise."""
+    want_s = _real_sched(_real_backend(model_params, "pooled"))
+    a1 = want_s.submit(_prompt(13), tier="economy", max_new_tokens=5)
+    want_s.run_until_idle()
+
+    got_s = _real_sched(_real_backend(model_params, "pooled",
+                                      prefill_chunk=3))
+    a2 = got_s.submit(_prompt(13), tier="economy", max_new_tokens=5)
+    got_s.run_until_idle()
+    _assert_results_identical(got_s.completed[a2.request_id].result,
+                              want_s.completed[a1.request_id].result)
+
+
+# ------------------------------------------- allocator invariants (chaos)
+
+def _check_alloc(backend):
+    alloc = backend.allocator
+    free = set(alloc._free)
+    assert len(free) == len(alloc._free)           # no duplicate free entries
+    assert not free & set(alloc._ref)              # free xor referenced
+    # every non-free block is tracked with a positive refcount: in_use +
+    # free == total with zero untracked ("leaked") blocks
+    assert len(alloc._ref) + len(free) == alloc.n_blocks
+    assert all(v >= 1 for v in alloc._ref.values())
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.sampled_from(
+    ["submit", "step", "step", "fault", "preempt", "shed"]),
+    min_size=4, max_size=14))
+def test_allocator_invariants_under_preempt_resume_cancel_fault(
+        model_params, ops):
+    """The PR 10 robustness invariant: random interleavings of submission,
+    service, tier preemption, device faults and shedding never break
+    ``in_use + free == total``, and a full drain leaves zero refcount leaks
+    (everything still allocated is trie-resident, by exactly one ref)."""
+    backend = _real_backend(model_params, "pooled")
+    sched = _real_sched(backend, device="edge-npu", max_inflight_batches=2,
+                        retry_backoff_s=0.01, max_retries=10)
+    submitted = []
+    for i, op in enumerate(ops):
+        if op == "submit":
+            adm = sched.submit(_prompt(6, mult=(i % 3) + 1),
+                               tier=("interactive" if i % 2 else "economy"),
+                               max_new_tokens=4)
+            assert adm.admitted
+            submitted.append(adm.request_id)
+        elif op == "step":
+            sched.step()
+        elif op == "fault":
+            sched.on_drift(DriftEvent(sched.clock, "edge-npu",
+                                      "device_failed"))
+            sched.on_drift(DriftEvent(sched.clock, "edge-npu",
+                                      "device_recovered"))
+        elif op == "preempt" and sched.inflight:
+            sched.preempt(sched.inflight[-1], "tier")
+        elif op == "shed" and sched.queue.pending:
+            victim = sched.queue.shed_oldest(tier_priority)
+            sched._cancel(victim, "shed")
+        _check_alloc(backend)
+    sched.run_until_idle()
+    _check_alloc(backend)
+    # zero lost: every admitted request either completed or was cancelled
+    # with a recorded reason
+    assert set(submitted) == set(sched.completed) | set(sched.cancelled)
+    # zero leaks: no live handles; every still-allocated block is held by
+    # the prefix trie (refcount exactly 1 — the trie's)
+    assert not backend._live
+    alloc = backend.allocator
+    assert alloc.blocks_in_use == backend.prefix_pool.blocks_resident
+    assert all(ref == 1 and alloc.protected_owner(b) is not None
+               for b, ref in alloc._ref.items())
